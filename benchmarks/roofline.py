@@ -1,0 +1,132 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For every (arch × shape × mesh) cell this derives the three roofline terms
+from the compiled artifact (TPU v5e constants):
+
+    compute    = HLO_FLOPs  / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes  / (chips × 819 GB/s HBM)
+    collective = coll_bytes / (chips × 50 GB/s ICI link)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` per device and are
+scan-corrected (XLA counts a while body once; launch/dryrun measures the
+true per-group cost with unrolled reduced-depth compiles).  Collective
+bytes are parsed from the SPMD-partitioned HLO (per-device operand bytes),
+so ``coll_bytes = per_device × chips`` and the chips in numerator and
+denominator cancel — the term is per-chip collective seconds, exactly the
+formula's intent.
+
+Also reported per cell: MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE for
+training; 2·N·D for forward-only serving), the MODEL/HLO ratio
+(remat/padding/redundancy waste detector), the dominant term, and the
+roofline fraction  MODEL_FLOPS / (chips × peak × max(terms))  — the MFU-
+style score EXPERIMENTS.md §Perf hill-climbs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+__all__ = ["load_cells", "roofline_row", "roofline_table", "print_table"]
+
+
+def load_cells(art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _suggestion(dom: str, arch: str, shape: str) -> str:
+    if dom == "compute":
+        return ("compute-bound: cut HLO/model FLOP ratio (remat policy, "
+                "avoid padded tiles) or grow per-chip batch")
+    if dom == "memory":
+        return ("memory-bound: raise arithmetic intensity — fuse epilogues, "
+                "larger KV/weight blocks per pass, quantize cache/params")
+    return ("collective-bound: reshard to cut cross-chip traffic (a2a MoE "
+            "dispatch, overlap collectives with compute in the scanned body)")
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    sc = rec.get("scan_corrected")
+    flops_pd = (sc or rec["cost_analysis"])["flops_per_device"]
+    bytes_pd = (sc or rec["cost_analysis"])["bytes_per_device"]
+    coll_pd = (sc["collective_bytes_per_device"] if sc
+               else rec["collectives"]["total_bytes_per_device"])
+    compute_s = flops_pd / PEAK_BF16
+    memory_s = bytes_pd / HBM_BW
+    collective_s = coll_pd / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    step_s = terms[dom]
+    n_dev = rec["n_devices"]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops_pd * n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dom,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "model_over_hlo": mf / hlo_total if hlo_total else float("nan"),
+        "roofline_fraction": mf / (n_dev * PEAK_BF16 * step_s)
+        if step_s else float("nan"),
+        "temp_gb_per_dev": rec["memory_analysis"]["temp_bytes"] / 1e9,
+        "suggestion": _suggestion(dom, rec["arch"], rec["shape"]),
+    }
+
+
+def roofline_table(art_dir: str = "artifacts/dryrun",
+                   mesh: Optional[str] = "16x16") -> List[Dict]:
+    rows = []
+    for rec in load_cells(art_dir):
+        row = roofline_row(rec)
+        if row and (mesh is None or row["mesh"] == mesh):
+            rows.append(row)
+    rows.sort(key=lambda r: (r["shape"], -r["roofline_fraction"]))
+    return rows
+
+
+def print_table(rows: List[Dict], title: str = "Roofline (single-pod)"):
+    print(f"\n== {title} ==")
+    print(f"{'arch':>18} {'shape':>11} | {'compute':>9} {'memory':>9} "
+          f"{'collect':>9} | {'bound':>10} {'MFU':>6} {'mdl/hlo':>7} "
+          f"{'tempGB':>6}")
+    for r in rows:
+        print(f"{r['arch']:>18} {r['shape']:>11} | "
+              f"{r['compute_s']*1e3:8.2f}ms {r['memory_s']*1e3:8.2f}ms "
+              f"{r['collective_s']*1e3:8.2f}ms | {r['dominant']:>10} "
+              f"{100*r['roofline_fraction']:5.1f}% "
+              f"{r['model_over_hlo']:7.2f} {r['temp_gb_per_dev']:6.1f}")
+
+
+if __name__ == "__main__":
+    rows = roofline_table()
+    print_table(rows)
+    rows_mp = roofline_table(mesh="2x16x16")
+    print_table(rows_mp, "Roofline (multi-pod 2x16x16)")

@@ -1,0 +1,272 @@
+"""Paper-table reproductions (one function per table/figure).
+
+All numbers come from the analytical machine model (core/perfmodel — the
+reproduction's counterpart of the paper's trace-driven simulator, §V-E)
+evaluated over the 75-convolution + 18-transformer-GEMM suite
+(benchmarks/workloads).  Each function prints its table and returns rows
+as dicts; paper values are printed alongside for validation.
+"""
+from __future__ import annotations
+
+import statistics
+from collections import defaultdict
+from typing import Dict, List
+
+from benchmarks.workloads import (CONVOLUTIONS, TRANSFORMER_GEMMS, categories,
+                                  category_of, conv_to_gemm)
+from repro.core.isa import count_instructions
+from repro.core.perfmodel import model_gemm
+
+ARCHS = ["vector1k", "vector2k", "sifiveint", "mte8s", "mte32s", "mte32v"]
+
+ALL_GEMMS = [conv_to_gemm(c) for c in CONVOLUTIONS] + list(TRANSFORMER_GEMMS)
+
+
+def _geomean(xs):
+    return statistics.geometric_mean(xs) if xs else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — efficiency (% of peak) by OC/N category, all architectures
+# ---------------------------------------------------------------------------
+
+PAPER_FIG7 = {
+    # per-category efficiency the paper reports (× = not stated per cat)
+    "mte32s": [40.3, 67.3, None, None, None, 93.2],   # I and II-VI bounds
+    "mte32v": [29.1, 51.8, None, None, None, 86.8],
+}
+PAPER_SPEEDUPS_32S = {"vector1k": 2.67, "vector2k": 2.45, "sifiveint": 2.30,
+                      "mte8s": 1.35}
+PAPER_SPEEDUPS_32V = {"vector1k": 2.30, "vector2k": 2.11, "sifiveint": 1.98,
+                      "mte8s": 1.16}
+
+
+def table_efficiency(print_rows: bool = True) -> List[Dict]:
+    by_cat = defaultdict(lambda: defaultdict(list))
+    for g in ALL_GEMMS:
+        cat = category_of(g.n)
+        for arch in ARCHS:
+            t = model_gemm(arch, g.m, g.n, g.k)
+            by_cat[cat][arch].append(t.efficiency)
+
+    rows = []
+    if print_rows:
+        print("\n== Fig. 7: efficiency (% of peak) by OC/N category ==")
+        print(f"{'category':>12} | " + " | ".join(f"{a:>9}" for a in ARCHS))
+    for cat, (lo, hi) in enumerate(categories()):
+        row = {"category": f"{lo}-{hi}"}
+        for arch in ARCHS:
+            vals = by_cat[cat][arch]
+            row[arch] = 100 * sum(vals) / len(vals) if vals else float("nan")
+        rows.append(row)
+        if print_rows:
+            print(f"{row['category']:>12} | "
+                  + " | ".join(f"{row[a]:8.1f}%" for a in ARCHS))
+
+    # headline geomean speedups (paper §VI-A)
+    if print_rows:
+        print("\n-- geomean speedups over baselines (paper values in parens) --")
+    for target, paper in (("mte32s", PAPER_SPEEDUPS_32S),
+                          ("mte32v", PAPER_SPEEDUPS_32V)):
+        for base in ("vector1k", "vector2k", "sifiveint", "mte8s"):
+            sp = _geomean([
+                model_gemm(base, g.m, g.n, g.k).seconds
+                / model_gemm(target, g.m, g.n, g.k).seconds
+                for g in ALL_GEMMS])
+            rows.append({"speedup": f"{target}/{base}", "value": sp,
+                         "paper": paper[base]})
+            if print_rows:
+                print(f"  {target} over {base:10s}: {sp:5.2f}×   "
+                      f"(paper {paper[base]:4.2f}×)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — MTE vs AMX on the convolution set
+# ---------------------------------------------------------------------------
+
+
+def table_amx_comparison(print_rows: bool = True) -> Dict:
+    """Paper: AMX 52.8% vs MTE32v 68.1% average on convs → 1.29×."""
+    effs_amx, effs_mte = [], []
+    sp = []
+    for c in CONVOLUTIONS:
+        g = conv_to_gemm(c)
+        a = model_gemm("mte8s", g.m, g.n, g.k)     # AMX-semantics
+        b = model_gemm("mte32v", g.m, g.n, g.k)
+        effs_amx.append(a.efficiency)
+        effs_mte.append(b.efficiency)
+        sp.append(a.seconds / b.seconds)
+    out = {"amx_avg_eff": 100 * sum(effs_amx) / len(effs_amx),
+           "mte32v_avg_eff": 100 * sum(effs_mte) / len(effs_mte),
+           "speedup": _geomean(sp)}
+    if print_rows:
+        print("\n== Fig. 9: convolution efficiency, AMX-semantics vs MTE32v ==")
+        print(f"  AMX(=MTE8s) avg eff {out['amx_avg_eff']:5.1f}% "
+              f"(paper 52.8%) | MTE32v {out['mte32v_avg_eff']:5.1f}% "
+              f"(paper 68.1%) | speedup {out['speedup']:4.2f}x (paper 1.29x)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table IX — retired vector/matrix instruction reduction vs Vector 1KB
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE_IX = {
+    "vector2k": [1.00, 1.00, 1.00, 1.00, 2.00, 1.81],
+    "sifiveint": [5.97, 5.87, 3.69, 2.78, 2.76, 2.44],
+    "mte8s": [36.40, 17.48, 8.95, 5.57, 4.95, 4.67],
+    "mte32s": [37.22, 18.55, 11.37, 7.89, 7.88, 6.92],
+}
+
+
+def table_instructions(print_rows: bool = True) -> List[Dict]:
+    by_cat = defaultdict(lambda: defaultdict(list))
+    for g in ALL_GEMMS:
+        cat = category_of(g.n)
+        base = count_instructions("vector1k", g.m, g.n, g.k).total
+        for arch in ("vector2k", "sifiveint", "mte8s", "mte32s", "mte32v"):
+            c = count_instructions(arch, g.m, g.n, g.k).total
+            by_cat[cat][arch].append(base / c)
+
+    rows = []
+    if print_rows:
+        print("\n== Table IX: instruction-count reduction vs Vector 1KB ==")
+        print(f"{'category':>12} | {'vector2k':>9} | {'sifiveint':>9} | "
+              f"{'mte8s':>9} | {'mte32s':>9} | paper(mte32)")
+    for cat, (lo, hi) in enumerate(categories()):
+        row = {"category": f"{lo}-{hi}"}
+        for arch in ("vector2k", "sifiveint", "mte8s", "mte32s", "mte32v"):
+            vals = by_cat[cat][arch]
+            row[arch] = sum(vals) / len(vals) if vals else float("nan")
+        rows.append(row)
+        if print_rows:
+            paper = PAPER_TABLE_IX["mte32s"][cat]
+            print(f"{row['category']:>12} | {row['vector2k']:9.2f} | "
+                  f"{row['sifiveint']:9.2f} | {row['mte8s']:9.2f} | "
+                  f"{row['mte32s']:9.2f} | {paper:9.2f}")
+    avg = {a: statistics.mean(r[a] for r in rows)
+           for a in ("vector2k", "sifiveint", "mte8s", "mte32s")}
+    if print_rows:
+        print(f"{'average':>12} | {avg['vector2k']:9.2f} | "
+              f"{avg['sifiveint']:9.2f} | {avg['mte8s']:9.2f} | "
+              f"{avg['mte32s']:9.2f} | paper: 1.24/4.05/12.38/14.31")
+    rows.append({"category": "average", **avg})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — end-to-end model speedup over AMX-semantics (Amdahl composition)
+# ---------------------------------------------------------------------------
+
+# GEMM/conv share of inference time per model (paper §VI-A1).
+GEMM_SHARE = {"squeezenet": 0.3722, "inception": 0.5136, "resnet50": 0.4892,
+              "bert": 0.7616, "gpt2": 0.6704}
+MODEL_WORKLOADS = {
+    "squeezenet": [c for c in CONVOLUTIONS if c.name.startswith("sq.")],
+    "inception": [c for c in CONVOLUTIONS if c.name.startswith("in.")],
+    "resnet50": [c for c in CONVOLUTIONS if c.name.startswith("rn.")],
+    "bert": [g for g in TRANSFORMER_GEMMS if ".d768" in g.name],
+    "gpt2": [g for g in TRANSFORMER_GEMMS if ".d512" in g.name],
+}
+PAPER_FIG8 = {"squeezenet": (1.05, 1.02), "inception": (1.09, 1.04),
+              "resnet50": (1.13, 1.10), "bert": (1.20, 1.15),
+              "gpt2": (1.22, 1.16)}
+
+
+def table_e2e(print_rows: bool = True) -> List[Dict]:
+    rows = []
+    if print_rows:
+        print("\n== Fig. 8: end-to-end speedup over AMX-semantics (MTE8s) ==")
+        print(f"{'model':>12} | {'mte32s':>7} | {'mte32v':>7} | paper(s/v)")
+    for model, workloads in MODEL_WORKLOADS.items():
+        gemms = [conv_to_gemm(w) if hasattr(w, "ic") else w
+                 for w in workloads]
+        t8 = sum(model_gemm("mte8s", g.m, g.n, g.k).seconds for g in gemms)
+        share = GEMM_SHARE[model]
+        row = {"model": model}
+        for target in ("mte32s", "mte32v"):
+            tt = sum(model_gemm(target, g.m, g.n, g.k).seconds
+                     for g in gemms)
+            gemm_speedup = t8 / tt
+            row[target] = 1.0 / ((1 - share) + share / gemm_speedup)
+        rows.append(row)
+        if print_rows:
+            ps, pv = PAPER_FIG8[model]
+            print(f"{model:>12} | {row['mte32s']:6.2f}x | "
+                  f"{row['mte32v']:6.2f}x | ({ps:.2f}/{pv:.2f})")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 — energy-to-solution  &  Table VIII — register-file area
+# ---------------------------------------------------------------------------
+
+# Energy constants (pJ) calibrated so the register file carries ~77% of
+# total energy, as the paper measures with McPAT for all three MTE designs.
+_E_RF_BYTE = 1.1      # per byte moved through the vector register file
+_E_FLOP = 0.05        # per fp32 flop through the FMA/MMA arrays
+_E_L2_BYTE = 0.25
+_E_DRAM_BYTE = 10.0
+
+
+def _energy(arch: str, g) -> Dict[str, float]:
+    from repro.core.isa import count_instructions as ci
+    t = model_gemm(arch, g.m, g.n, g.k)
+    c = ci(arch, g.m, g.n, g.k)
+    reg_bytes = 1024  # one vector register
+    rf_traffic = (c.tile_loads + c.tile_stores + c.vector_ops) * reg_bytes \
+        + c.mma * 3 * reg_bytes  # 2 source tiles + accumulator RMW
+    rf = rf_traffic * _E_RF_BYTE
+    fu = t.useful_flops * _E_FLOP
+    other = t.useful_flops * _E_L2_BYTE * 0.05 + 2 * g.m * g.n * _E_DRAM_BYTE
+    return {"rf": rf, "fu": fu, "other": other, "total": rf + fu + other}
+
+
+def table_energy(print_rows: bool = True) -> List[Dict]:
+    rows = []
+    if print_rows:
+        print("\n== Fig. 10: energy-to-solution vs MTE8s (register-file "
+              "dominant, paper: RF ≈ 77%) ==")
+    for cat, (lo, hi) in enumerate(categories()):
+        gs = [g for g in ALL_GEMMS if category_of(g.n) == cat]
+        if not gs:
+            continue
+        e8 = sum(_energy("mte8s", g)["total"] for g in gs)
+        row = {"category": f"{lo}-{hi}"}
+        for arch in ("mte32s", "mte32v"):
+            e = sum(_energy(arch, g)["total"] for g in gs)
+            row[arch] = e / e8
+        rf_share = (sum(_energy("mte32s", g)["rf"] for g in gs)
+                    / sum(_energy("mte32s", g)["total"] for g in gs))
+        row["rf_share_mte32s"] = rf_share
+        rows.append(row)
+        if print_rows:
+            print(f"  {row['category']:>9}: mte32s {row['mte32s']:.3f} "
+                  f"mte32v {row['mte32v']:.3f} (RF share "
+                  f"{100 * rf_share:.0f}%)")
+    return rows
+
+
+PAPER_AREA_MM2 = {"vector1k": 1.66, "vector2k": 4.15, "sifiveint": 1.66,
+                  "mte8s": 1.65, "mte32s": 1.66, "mte32v": 1.66}
+
+
+def table_area(print_rows: bool = True) -> List[Dict]:
+    """Table VIII: physical register file area scales with total bits
+    (5 nm FinFET constant calibrated on the Vector-1KB point)."""
+    from repro.core.geometry import PROFILES
+    base = PROFILES["vector1k"]
+    mm2_per_bit = PAPER_AREA_MM2["vector1k"] / (base.phys_regs
+                                                * base.vlen_bits)
+    rows = []
+    if print_rows:
+        print("\n== Table VIII: physical register file area (mm², 5nm) ==")
+    for arch in ARCHS:
+        p = PROFILES[arch]
+        est = p.phys_regs * p.vlen_bits * mm2_per_bit
+        rows.append({"arch": arch, "mm2": est,
+                     "paper": PAPER_AREA_MM2[arch]})
+        if print_rows:
+            print(f"  {arch:>10}: {est:5.2f} (paper {PAPER_AREA_MM2[arch]})")
+    return rows

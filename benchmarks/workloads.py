@@ -1,0 +1,153 @@
+"""The paper's evaluation workloads (§V-B): 75 unique convolutions from
+ResNet-50 / Inception-v3 / VGG-16 / YOLO(Darknet-19) / SqueezeNet-1.1 and
+18 transformer GEMMs (BERT/GPT-2 projections + BERT4Rec-style recsys).
+
+The paper does not list the individual layer shapes; this table
+reconstructs them from the published network definitions (same sources the
+paper cites), minibatch 16 (§V-B2), fp32.  Convolutions map to GEMMs with
+M = N·OH·OW, N = OC, K = IC·KH·KW (direct-convolution mapping, §V-B1).
+Transformer GEMMs use inference query sizes 16/32, d_model 512/768 with
+8/12 heads and 2048 hidden FF connections (§V-B3) — so N ∈ [512, 2304],
+landing in Fig. 7 categories V-VI exactly as the paper describes (e.g.
+N = 768 does not divide the Vector-2KB VL of 512).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.core.conv import ConvSpec
+
+__all__ = ["CONVOLUTIONS", "TRANSFORMER_GEMMS", "conv_to_gemm", "categories",
+           "category_of", "GemmWorkload"]
+
+MB = 16  # minibatch (§V-B2)
+
+
+def _c(name, h, ic, oc, k, stride=1, pad=None, w=None) -> ConvSpec:
+    pad = pad if pad is not None else k // 2
+    return ConvSpec(name, MB, h, w or h, ic, oc, k, k, stride, pad)
+
+
+# --- ResNet-50 (unique convs) -------------------------------------------------
+_RESNET = [
+    _c("rn.conv1", 224, 3, 64, 7, 2, 3),
+    _c("rn.c2.a", 56, 64, 64, 1), _c("rn.c2.b", 56, 64, 64, 3),
+    _c("rn.c2.c", 56, 64, 256, 1), _c("rn.c2.d", 56, 256, 64, 1),
+    _c("rn.c3.a", 56, 256, 128, 1, 2),
+    _c("rn.c3.b", 28, 128, 128, 3), _c("rn.c3.c", 28, 128, 512, 1),
+    _c("rn.c3.d", 28, 512, 128, 1),
+    _c("rn.c4.a", 28, 512, 256, 1, 2),
+    _c("rn.c4.b", 14, 256, 256, 3), _c("rn.c4.c", 14, 256, 1024, 1),
+    _c("rn.c4.d", 14, 1024, 256, 1),
+    _c("rn.c5.down", 14, 1024, 2048, 1, 2), _c("rn.c5.a", 14, 1024, 512, 1, 2),
+    _c("rn.c5.b", 7, 512, 512, 3), _c("rn.c5.c", 7, 512, 2048, 1),
+    _c("rn.c5.d", 7, 2048, 512, 1),
+]
+
+# --- VGG-16 ---------------------------------------------------------------------
+_VGG = [
+    _c("vgg.1_1", 224, 3, 64, 3), _c("vgg.1_2", 224, 64, 64, 3),
+    _c("vgg.2_1", 112, 64, 128, 3), _c("vgg.2_2", 112, 128, 128, 3),
+    _c("vgg.3_1", 56, 128, 256, 3), _c("vgg.3_2", 56, 256, 256, 3),
+    _c("vgg.4_1", 28, 256, 512, 3), _c("vgg.4_2", 28, 512, 512, 3),
+]
+
+# --- SqueezeNet 1.1 ---------------------------------------------------------------
+_SQUEEZE = [
+    _c("sq.conv1", 224, 3, 64, 3, 2, 0),
+    _c("sq.f2.s", 56, 64, 16, 1), _c("sq.f2.e1", 56, 16, 64, 1),
+    _c("sq.f2.e3", 56, 16, 64, 3),
+    _c("sq.f4.s", 28, 128, 32, 1), _c("sq.f4.e1", 28, 32, 128, 1),
+    _c("sq.f4.e3", 28, 32, 128, 3),
+    _c("sq.f6.s", 14, 256, 48, 1), _c("sq.f6.e1", 14, 48, 192, 1),
+    _c("sq.f6.e3", 14, 48, 192, 3),
+    _c("sq.f8.s", 14, 384, 64, 1), _c("sq.f8.e1", 14, 64, 256, 1),
+    _c("sq.f8.e3", 14, 64, 256, 3), _c("sq.f9.s", 14, 512, 64, 1),
+]
+
+# --- Inception v3 -------------------------------------------------------------------
+_INCEPTION = [
+    _c("in.c1", 299, 3, 32, 3, 2, 0), _c("in.c2", 149, 32, 32, 3, 1, 0),
+    _c("in.c3", 147, 32, 64, 3), _c("in.c4", 73, 64, 80, 1, 1, 0),
+    _c("in.c5", 73, 80, 192, 3, 1, 0),
+    _c("in.m5.1x1", 35, 192, 64, 1), _c("in.m5.5x5r", 35, 192, 48, 1),
+    _c("in.m5.5x5", 35, 48, 64, 5), _c("in.m5.3x3r", 35, 192, 96, 1),
+    _c("in.m5.3x3", 35, 96, 96, 3), _c("in.m5.pool", 35, 192, 32, 1),
+    _c("in.m6.3x3", 35, 288, 384, 3, 2, 0),
+    _c("in.m6.7x7r", 17, 768, 128, 1),
+    _c("in.m6.1x7", 17, 128, 128, 1, 1, 0, 17),   # factorized 1x7 (as 1xk)
+    _c("in.m6.7x1", 17, 128, 192, 7, 1, 3),
+    _c("in.m6e.r", 17, 768, 192, 1), _c("in.m6e.7x1", 17, 192, 192, 7, 1, 3),
+    _c("in.m7.3x3r", 17, 768, 320, 1), _c("in.m7.3x3", 17, 320, 320, 3, 2, 0),
+    _c("in.m8.1x1", 8, 1280, 320, 1), _c("in.m8.3x3r", 8, 1280, 448, 1),
+    _c("in.m8.3x3", 8, 448, 384, 3), _c("in.m8.b", 8, 1280, 384, 1),
+    _c("in.m8c.1x1", 8, 2048, 320, 1), _c("in.m8c.b", 8, 2048, 448, 1),
+]
+
+# --- YOLO (Darknet-19 backbone) ------------------------------------------------------
+_YOLO = [
+    _c("yl.c1", 416, 3, 32, 3), _c("yl.c2", 208, 32, 64, 3),
+    _c("yl.c3", 104, 64, 128, 3),
+    _c("yl.c5", 52, 128, 256, 3), _c("yl.c6", 52, 256, 128, 1),
+    _c("yl.c7", 26, 256, 512, 3), _c("yl.c8", 26, 512, 256, 1),
+    _c("yl.c9", 13, 512, 1024, 3), _c("yl.c10", 13, 1024, 512, 1),
+    _c("yl.head", 13, 1024, 425, 1),
+]
+
+CONVOLUTIONS: List[ConvSpec] = (_RESNET + _VGG + _SQUEEZE + _INCEPTION
+                                + _YOLO)
+assert len(CONVOLUTIONS) == 75, len(CONVOLUTIONS)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmWorkload:
+    name: str
+    m: int
+    n: int
+    k: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+
+def _transformer_suite() -> List[GemmWorkload]:
+    out = []
+    for q in (16, 32):
+        for d in (512, 768):
+            out += [
+                GemmWorkload(f"t.q{q}.d{d}.qkv", q, 3 * d, d),
+                GemmWorkload(f"t.q{q}.d{d}.attn_out", q, d, d),
+                GemmWorkload(f"t.q{q}.d{d}.ff1", q, 2048, d),
+                GemmWorkload(f"t.q{q}.d{d}.ff2", q, d, 2048),
+            ]
+    # BERT4Rec-style recsys (sequence length 200, d_model 768)
+    out += [GemmWorkload("rec.seq200.proj", 200, 768, 768),
+            GemmWorkload("rec.seq200.ff1", 200, 2048, 768)]
+    assert len(out) == 18
+    return out
+
+
+TRANSFORMER_GEMMS: List[GemmWorkload] = _transformer_suite()
+
+
+def conv_to_gemm(spec: ConvSpec) -> GemmWorkload:
+    """Direct-convolution GEMM mapping (§V-B1)."""
+    return GemmWorkload(spec.name, spec.n * spec.oh * spec.ow, spec.oc,
+                        spec.ic * spec.kh * spec.kw)
+
+
+# Fig. 7 category boundaries on OC (convs) / N (GEMMs).
+_CATS = [(1, 32), (33, 64), (65, 128), (129, 256), (257, 512), (513, 2048)]
+
+
+def categories() -> List[Tuple[int, int]]:
+    return list(_CATS)
+
+
+def category_of(n: int) -> int:
+    for i, (lo, hi) in enumerate(_CATS):
+        if lo <= n <= hi:
+            return i
+    return len(_CATS) - 1

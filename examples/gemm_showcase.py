@@ -1,0 +1,75 @@
+"""GEMM showcase: the paper's core result, end to end.
+
+Reproduces the paper's motivating experiment in miniature: run the same
+GEMM workloads under a *rigid* AMX-style schedule and under the MTE
+geometry-agnostic schedule, comparing (a) numerics (identical), (b) the
+modeled TPU efficiency of the solved schedules, and (c) the direct
+convolution lowering with a fused epilogue.
+
+Run:  PYTHONPATH=src python examples/gemm_showcase.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Epilogue, mte_gemm, plan_gemm
+from repro.core.conv import conv2d_direct
+from repro.core.perfmodel import model_gemm
+
+print("=" * 72)
+print("1. Geometry agnosticism: the same API, shape-adapted schedules")
+print("=" * 72)
+workloads = [
+    ("square 2k", 2048, 2048, 2048),
+    ("transformer decode GEMV", 16, 2048, 2048),
+    ("small-OC conv (SqueezeNet)", 3136, 16, 64),
+    ("MoE expert (qwen3)", 512, 1536, 4096),
+]
+print(f"{'workload':>28} | {'MTE blocks':>15} | {'MTE eff':>8} | {'rigid eff':>9}")
+for name, m, n, k in workloads:
+    mte = plan_gemm(m, n, k, dtype_in=jnp.bfloat16, policy="mte")
+    amx = plan_gemm(m, n, k, dtype_in=jnp.bfloat16, policy="amx")
+    g = mte.geometry
+    print(f"{name:>28} | ({g.bm:4d},{g.bn:4d},{g.bk:4d}) | "
+          f"{100 * mte.efficiency:7.1f}% | {100 * amx.efficiency:8.1f}%")
+
+print()
+print("=" * 72)
+print("2. The CPU-ISA comparison (paper Fig. 7 machine model)")
+print("=" * 72)
+m, n, k = 3136, 64, 288  # a category-II convolution GEMM
+print(f"GEMM {m}x{n}x{k}:")
+for arch in ("vector1k", "sifiveint", "mte8s", "mte32s"):
+    t = model_gemm(arch, m, n, k)
+    print(f"  {arch:>10}: {100 * t.efficiency:5.1f}% of peak "
+          f"({t.bottleneck}-bound, {t.seconds * 1e6:7.1f} us)")
+
+print()
+print("=" * 72)
+print("3. Numerics: rigid and adaptive schedules agree bit-for-bit-ish")
+print("=" * 72)
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((130, 70), np.float32))
+b = jnp.asarray(rng.standard_normal((70, 100), np.float32))
+epi = Epilogue(alpha=2.0, has_bias=True, activation="silu")
+bias = jnp.asarray(rng.standard_normal(100, np.float32))
+o1 = mte_gemm(a, b, bias=bias, epilogue=epi, backend="pallas", policy="mte")
+o2 = mte_gemm(a, b, bias=bias, epilogue=epi, backend="pallas", policy="amx")
+np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+print(f"mte vs rigid max delta: {float(jnp.max(jnp.abs(o1 - o2))):.2e}  ✓")
+
+print()
+print("=" * 72)
+print("4. Direct convolution through MTE GEMMs (fused bias+ReLU epilogue)")
+print("=" * 72)
+x = jnp.asarray(rng.standard_normal((2, 14, 14, 64), np.float32))
+w = jnp.asarray(rng.standard_normal((3, 3, 64, 128), np.float32))
+cb = jnp.asarray(rng.standard_normal(128, np.float32))
+y = conv2d_direct(x, w, bias=cb, pad=1,
+                  epilogue=Epilogue(has_bias=True, activation="relu"))
+ref = jax.lax.conv_general_dilated(
+    x, w, (1, 1), [(1, 1), (1, 1)],
+    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+ref = jnp.maximum(ref + cb, 0)
+np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+print(f"conv {x.shape} * {w.shape} -> {y.shape}  ✓ matches lax.conv")

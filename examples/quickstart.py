@@ -1,0 +1,67 @@
+"""Quickstart: the MTE GEMM public API in 60 seconds.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Epilogue, mte_gemm, plan_gemm
+from repro.core.tile_state import SEW, TileState
+from repro.core.geometry import PROFILES, max_tile_dims
+
+# ---------------------------------------------------------------------------
+# 1. The paper's architectural state: tile shapes live in one 64-bit CSR and
+#    the hardware *grants* geometry from VLEN/RLEN/SEW (Formula 2/3).
+# ---------------------------------------------------------------------------
+tile = max_tile_dims(PROFILES["mte32s"], SEW.E32)
+print(f"Formula 2 (VLEN 8192, RLEN 512, fp32): max tile = {tile.mnk}")
+tile_mixed = max_tile_dims(PROFILES["mte32s"], SEW.E16, SEW.E32)
+print(f"Formula 3 (bf16→f32, B transposed):    max tile = {tile_mixed.mnk}")
+
+csr = TileState(tm=16, tn=16, tk=16, sew_i=SEW.E16, sew_o=SEW.E32)
+print(f"CSR word: 0x{csr.encode():016x}  (decodes back: "
+      f"{TileState.decode(csr.encode()) == csr})")
+
+# ---------------------------------------------------------------------------
+# 2. The TPU adaptation: the geometry solver picks Pallas block shapes from
+#    the problem + hardware constants — never hard-coded.
+# ---------------------------------------------------------------------------
+for (m, n, k) in [(4096, 4096, 4096), (16, 2048, 512), (3136, 32, 288)]:
+    plan = plan_gemm(m, n, k, dtype_in=jnp.bfloat16)
+    g = plan.geometry
+    print(f"GEMM {m}x{n}x{k}: blocks ({g.bm},{g.bn},{g.bk}) "
+          f"transposed_b={g.transposed_b} → modeled "
+          f"{100 * plan.efficiency:.0f}% of v5e peak "
+          f"({plan.timing.bottleneck}-bound)")
+
+# ---------------------------------------------------------------------------
+# 3. Run a GEMM with a fused BLAS epilogue (the matrix↔vector interplay):
+#    act(alpha·AB + beta·C + bias) in one kernel pass.
+# ---------------------------------------------------------------------------
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((100, 70), np.float32))
+b = jnp.asarray(rng.standard_normal((70, 50), np.float32))
+c = jnp.asarray(rng.standard_normal((100, 50), np.float32))
+bias = jnp.asarray(rng.standard_normal(50, np.float32))
+epi = Epilogue(alpha=0.5, beta=1.0, has_bias=True, activation="gelu")
+
+out_pallas = mte_gemm(a, b, c, bias, epilogue=epi, backend="pallas")
+out_ref = mte_gemm(a, b, c, bias, epilogue=epi, backend="reference")
+np.testing.assert_allclose(out_pallas, out_ref, rtol=2e-5, atol=2e-5)
+print(f"\nfused-epilogue GEMM: pallas == reference ✓ "
+      f"(max abs {float(jnp.max(jnp.abs(out_pallas - out_ref))):.2e})")
+
+# ---------------------------------------------------------------------------
+# 4. A model from the zoo, one forward pass.
+# ---------------------------------------------------------------------------
+from repro.configs import get_config
+from repro.models import model as M
+
+cfg = get_config("gemma_2b").reduced()
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                      cfg.vocab)}
+logits, _ = M.forward(params, batch, cfg)
+print(f"gemma_2b (reduced) forward: logits {logits.shape}, "
+      f"loss {float(M.loss_fn(params, batch, cfg)[0]):.3f}")

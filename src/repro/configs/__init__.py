@@ -1,0 +1,6 @@
+"""Architecture configs.  ``get_config(name)`` resolves any assigned arch."""
+from repro.configs.base import (ARCH_NAMES, SHAPES, ArchConfig, ShapeSpec,
+                                get_config, input_specs)
+
+__all__ = ["ARCH_NAMES", "SHAPES", "ArchConfig", "ShapeSpec", "get_config",
+           "input_specs"]

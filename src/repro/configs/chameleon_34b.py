@@ -1,0 +1,16 @@
+"""chameleon-34b [vlm]: early-fusion, VQ image tokens.
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536 [arXiv:2405.09818].
+QK-norm is Chameleon's signature stability fix.  The VQ image tokenizer is
+a STUB per the assignment (inputs are precomputed token/patch embeddings).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chameleon_34b",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab=65536,
+    pattern=(("attn", "mlp"),),
+    mlp_type="swiglu", norm_type="rmsnorm", qk_norm=True,
+    rope_theta=10000.0, frontend_stub=True,
+))

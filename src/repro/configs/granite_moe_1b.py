@@ -1,0 +1,20 @@
+"""granite-moe-1b-a400m [moe]: 32 experts, top-8.
+
+24L d_model=1024 16H (GQA kv=8) d_ff_expert=512 vocab=49155
+[hf:ibm-granite/granite-3.0-1b-a400m-base].
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite_moe_1b",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155,
+    pattern=(("attn", "moe"),),
+    mlp_type="swiglu", norm_type="rmsnorm",
+    rope_theta=10000.0, tied_embeddings=True,
+    # Production default: explicit all-to-all expert parallelism —
+    # §Perf pair 1 measured 10.3× over the GSPMD scatter dispatch
+    # (baseline roofline numbers were collected with moe_impl="scatter").
+    moe_impl="a2a",
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff_expert=512),
+))

@@ -1,0 +1,17 @@
+"""musicgen-medium [audio]: decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048 [arXiv:2306.05284].
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings; the backbone is a standard LayerNorm+GELU
+decoder with biases (fairseq lineage).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="musicgen_medium",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048,
+    pattern=(("attn", "mlp"),),
+    mlp_type="gelu", norm_type="layernorm", qkv_bias=True, mlp_bias=True,
+    rope_theta=10000.0, frontend_stub=True,
+))

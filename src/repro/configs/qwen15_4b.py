@@ -1,0 +1,15 @@
+"""qwen1.5-4b [dense]: QKV bias.
+
+40L d_model=2560 20H (MHA kv=20) d_ff=6912 vocab=151936
+[hf:Qwen/Qwen1.5 family].
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen15_4b",
+    n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, head_dim=128,
+    d_ff=6912, vocab=151936,
+    pattern=(("attn", "mlp"),),
+    mlp_type="swiglu", norm_type="rmsnorm", qkv_bias=True,
+    rope_theta=1000000.0,
+))

@@ -1,0 +1,25 @@
+"""MTE core: the paper's contribution as a composable JAX library.
+
+Layout:
+- ``tile_state``  — the 64-bit MTE CSR, bit-accurate (paper §III-B).
+- ``geometry``    — Formula 2/3 tile solvers + TPU BlockSpec solver (§III-A).
+- ``epilogue``    — vector-processing-mode epilogues (§III-C4).
+- ``dispatch``    — ``mte_gemm`` public entry point.
+- ``isa``         — retired-instruction accounting (Table IX).
+- ``perfmodel``   — analytical machine model (§V-E simulator analogue).
+- ``conv``        — direct convolution → MTE GEMM lowering (§V-B1).
+"""
+from repro.core.dispatch import GemmPlan, mte_gemm, plan_gemm
+from repro.core.epilogue import Epilogue
+from repro.core.geometry import (
+    PROFILES, TPU_V5E, BlockGeometry, HardwareProfile, TpuProfile,
+    max_tile_dims, solve_block_geometry, solve_unroll,
+)
+from repro.core.tile_state import SEW, TailPolicy, TileState
+
+__all__ = [
+    "GemmPlan", "mte_gemm", "plan_gemm", "Epilogue",
+    "PROFILES", "TPU_V5E", "BlockGeometry", "HardwareProfile", "TpuProfile",
+    "max_tile_dims", "solve_block_geometry", "solve_unroll",
+    "SEW", "TailPolicy", "TileState",
+]

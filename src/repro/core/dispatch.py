@@ -1,0 +1,103 @@
+"""Public MTE GEMM entry point — the framework's "instruction set".
+
+``mte_gemm`` is the single GEMM surface the whole framework (models,
+convolutions, MoE experts, attention projections) calls into.  It plays the
+role the MTE ISA plays in the paper: callers state *what* they want
+(operand shapes, dtypes, epilogue) and the dispatch layer *grants* an
+execution geometry from the hardware profile (``solve_block_geometry``,
+Formula 2/3 generalized) and routes to a backend:
+
+- ``backend="pallas"``      — the Pallas TPU kernel (interpret=True on CPU,
+                              compiled Mosaic on a real TPU).
+- ``backend="xla"``         — plain jnp.dot + fused-by-XLA epilogue.  Used
+                              inside pjit'd training/serving graphs and for
+                              the multi-pod dry-run (Mosaic cannot lower on
+                              the CPU backend).
+- ``backend="reference"``   — the pure-jnp oracle from kernels/ref.py.
+
+Geometry/ISA statistics are available via ``plan_gemm`` for benchmarks,
+without running anything — the analytical path the paper's Table IX and
+Fig. 7 reproductions use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.epilogue import Epilogue
+from repro.core.geometry import (
+    BlockGeometry, Policy, TPU_V5E, TpuProfile, solve_block_geometry,
+)
+from repro.core.perfmodel import TpuGemmTiming, tpu_gemm_time
+from repro.core.tile_state import SEW
+
+__all__ = ["GemmPlan", "plan_gemm", "mte_gemm"]
+
+_DEFAULT_BACKEND = "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """A granted execution plan for one GEMM (the dry 'tss' handshake)."""
+
+    m: int
+    n: int
+    k: int
+    geometry: BlockGeometry
+    timing: TpuGemmTiming
+
+    @property
+    def efficiency(self) -> float:
+        return self.timing.efficiency
+
+
+def plan_gemm(m: int, n: int, k: int, dtype_in=jnp.float32,
+              dtype_out=None, policy: Policy = "mte",
+              profile: TpuProfile = TPU_V5E, n_cores: int = 1) -> GemmPlan:
+    dtype_out = dtype_out or dtype_in
+    sew_i = SEW.from_dtype(dtype_in)
+    sew_o = SEW.from_dtype(dtype_out)
+    geom = solve_block_geometry(m, n, k, sew_i, sew_o, profile=profile,
+                                policy=policy, n_cores=n_cores)
+    timing = tpu_gemm_time(geom, m, n, k, profile=profile)
+    return GemmPlan(m=m, n=n, k=k, geometry=geom, timing=timing)
+
+
+def mte_gemm(a, b, c=None, bias=None, *,
+             epilogue: Optional[Epilogue] = None,
+             policy: Policy = "mte",
+             backend: str = _DEFAULT_BACKEND,
+             out_dtype=None,
+             interpret: bool = True):
+    """Compute ``epilogue(a @ b [, c, bias])`` with MTE geometry selection.
+
+    a: (M, K); b: (K, N); optional c: (M, N) when ``epilogue.beta != 0``;
+    optional bias: (N,) or (M,) per ``epilogue.bias_axis``.
+    Accumulation is always f32 (``SEW_o``), output cast to ``out_dtype``
+    (defaults to f32 for mixed precision, input dtype otherwise).
+    """
+    epilogue = epilogue or Epilogue()
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"GEMM contraction mismatch: {a.shape} @ {b.shape}")
+    if out_dtype is None:
+        out_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.int8) else a.dtype
+
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
+                            policy=policy, out_dtype=out_dtype,
+                            interpret=interpret)
+    if backend == "reference":
+        from repro.kernels import ref
+        return ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
+                            out_dtype=out_dtype)
+    # XLA path: one dot with f32 accumulation + jnp epilogue; XLA fuses the
+    # epilogue into the GEMM consumer on TPU, matching MTE's in-register
+    # vector-mode post-ops.
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    out = epilogue.apply(acc, c_in=c, bias=bias)
+    return out.astype(out_dtype)

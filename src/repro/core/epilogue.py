@@ -1,0 +1,93 @@
+"""GEMM epilogues — the paper's "vector processing mode" (§III-C4).
+
+MTE's signature capability is that element-wise post-processing of a GEMM
+result happens *on the same registers* that hold the accumulator tile:
+``vsetvl`` + ``tvmask`` configure the vector unit over the tile, then plain
+masked vector arithmetic applies the BLAS ``α·AB + β·C`` scaling, bias
+addition (a 0-stride broadcast tile load, §III-C2), and any activation —
+with no memory round-trip.  AMX, by contrast, must store the tile to
+memory and reload it into AVX-512 registers (§II-C1).
+
+On TPU the analogue is fusing the epilogue into the Pallas kernel while the
+accumulator still lives in VMEM/VREGs.  The ``Epilogue`` spec below is
+consumed by both the Pallas kernels (fused path) and the pure-jnp reference
+oracles, and by the rigid baseline (which applies it as a *separate* pass to
+model the AMX memory round-trip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Epilogue", "ACTIVATIONS"]
+
+
+def _tanh_softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap)
+
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """BLAS-style epilogue: ``act(alpha * acc + beta * C_in + bias)``.
+
+    ``bias_axis`` selects the broadcast direction of a 1-D bias — ``"row"``
+    broadcasts over rows (one value per output column, the common NN bias)
+    and ``"col"`` over columns; both correspond to the paper's 0-stride
+    broadcast tile loads.  ``softcap`` applies Gemma-2-style tanh soft
+    capping *before* the activation (a pure vector-mode op in MTE terms).
+    """
+
+    alpha: float = 1.0
+    beta: float = 0.0
+    has_bias: bool = False
+    bias_axis: str = "row"  # "row": shape (N,), "col": shape (M,)
+    activation: str = "none"
+    softcap: Optional[float] = None
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}")
+        if self.bias_axis not in ("row", "col"):
+            raise ValueError(f"bias_axis must be 'row' or 'col'")
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.alpha == 1.0 and self.beta == 0.0 and not self.has_bias
+                and self.activation == "none" and self.softcap is None)
+
+    @property
+    def needs_c_input(self) -> bool:
+        return self.beta != 0.0
+
+    def apply(self, acc, c_in=None, bias=None):
+        """Pure-jnp application; operates in the accumulator dtype (f32)."""
+        out = acc * jnp.asarray(self.alpha, acc.dtype)
+        if self.beta != 0.0:
+            if c_in is None:
+                raise ValueError("beta != 0 requires c_in")
+            out = out + jnp.asarray(self.beta, acc.dtype) * c_in.astype(acc.dtype)
+        if self.has_bias:
+            if bias is None:
+                raise ValueError("has_bias requires bias operand")
+            b = bias.astype(acc.dtype)
+            if self.bias_axis == "row":
+                out = out + b[None, :]
+            else:
+                out = out + b[:, None]
+        if self.softcap is not None:
+            out = _tanh_softcap(out, self.softcap)
+        out = ACTIVATIONS[self.activation](out)
+        return out

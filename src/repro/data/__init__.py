@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticDataset
+__all__ = ["DataConfig", "SyntheticDataset"]

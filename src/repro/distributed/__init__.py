@@ -1,0 +1,2 @@
+from repro.distributed import sharding
+__all__ = ["sharding"]

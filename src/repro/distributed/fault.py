@@ -1,0 +1,116 @@
+"""Fault tolerance & straggler tooling.
+
+At thousand-node scale the failure model is: a host dies (checkpoint +
+restart on survivors), a host stalls (straggler — watchdog fires before the
+collective deadlocks the fleet), or the coordinator dies (supervisor
+restarts the whole job from LATEST).  This module provides the pieces the
+launcher composes:
+
+- ``StepWatchdog`` — detects hung/straggling steps by wall-clock deadline
+  and raises ``StragglerError`` so the supervisor can restart; a
+  production deployment points ``on_timeout`` at its cluster manager.
+- ``Heartbeat`` — periodic liveness file for external orchestrators
+  (k8s/GKE-style liveness probes).
+- ``supervise()`` — run a training function with restart-on-failure from
+  the latest checkpoint, up to ``max_restarts``; on each restart the mesh
+  is rebuilt from the devices that are actually present
+  (``make_elastic_mesh``) so a shrunk fleet keeps training (elastic
+  scaling) — checkpoint restore reshards automatically.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Optional
+
+__all__ = ["StragglerError", "StepWatchdog", "Heartbeat", "supervise"]
+
+
+class StragglerError(RuntimeError):
+    """A step exceeded its deadline — node straggling or collective hang."""
+
+
+class StepWatchdog:
+    """Arm before each step; disarm after.  Fires ``on_timeout`` (default:
+    raises StragglerError in the main thread via a flag the next ``check()``
+    observes — safe with jit'd steps that cannot be interrupted mid-call)."""
+
+    def __init__(self, timeout_s: float,
+                 on_timeout: Optional[Callable[[], None]] = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout
+        self._deadline: Optional[float] = None
+        self._fired = False
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._stop = threading.Event()
+        self._thread.start()
+
+    def arm(self):
+        with self._lock:
+            self._deadline = time.monotonic() + self.timeout_s
+            self._fired = False
+
+    def disarm(self):
+        with self._lock:
+            self._deadline = None
+
+    def check(self):
+        if self._fired:
+            raise StragglerError(
+                f"step exceeded {self.timeout_s}s deadline")
+
+    def stop(self):
+        self._stop.set()
+
+    def _loop(self):
+        while not self._stop.wait(0.5):
+            with self._lock:
+                expired = (self._deadline is not None
+                           and time.monotonic() > self._deadline)
+                if expired:
+                    self._deadline = None
+                    self._fired = True
+            if expired and self.on_timeout is not None:
+                self.on_timeout()
+
+
+class Heartbeat:
+    """Touches ``path`` every ``interval_s`` while alive."""
+
+    def __init__(self, path: str, interval_s: float = 10.0):
+        self.path = path
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop.wait(self.interval_s):
+            with open(self.path, "w") as f:
+                f.write(str(time.time()))
+
+    def stop(self):
+        self._stop.set()
+
+
+def supervise(run_fn: Callable[[int], None], *, max_restarts: int = 10,
+              backoff_s: float = 5.0, log=print) -> int:
+    """Run ``run_fn(attempt)`` with restart-on-failure.
+
+    ``run_fn`` is expected to resume from the latest checkpoint itself
+    (see launch/train.py).  Returns the number of restarts consumed.
+    """
+    for attempt in range(max_restarts + 1):
+        try:
+            run_fn(attempt)
+            return attempt
+        except StragglerError as e:
+            log(f"[supervise] straggler on attempt {attempt}: {e}; "
+                f"restarting from latest checkpoint")
+        except Exception as e:  # noqa: BLE001 — any failure → restart
+            log(f"[supervise] failure on attempt {attempt}: "
+                f"{type(e).__name__}: {e}; restarting")
+        time.sleep(backoff_s)
+    raise RuntimeError(f"exceeded {max_restarts} restarts")

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- ``mte_gemm``        — the paper's contribution: geometry-agnostic GEMM
+                        with fused vector-mode epilogue.
+- ``rigid_gemm``      — AMX-semantics baseline (fixed tiles, epilogue via
+                        HBM round trip).
+- ``grouped_gemm``    — per-expert MoE GEMM with MTE geometry.
+- ``flash_attention`` — blocked attention with MTE-solved tiles.
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,182 @@
+"""Custom VJPs so training differentiates *through* the Pallas kernels.
+
+The backward of a GEMM is two more GEMMs — so the MTE kernels are their
+own backward engine:
+
+    out = epilogue(A @ B [, C, bias])
+    dacc  = vjp of the (pure-jnp) epilogue at the recomputed accumulator
+    dA    = mte_gemm(dacc, Bᵀ)        (kernel)
+    dB    = mte_gemm(Aᵀ, dacc)        (kernel)
+    dC, dbias from the epilogue vjp
+
+The accumulator is *recomputed* in the backward (flash-style — nothing
+saved but the operands), matching the remat philosophy of the training
+stack.  The epilogue derivative is obtained with ``jax.vjp`` over
+``Epilogue.apply`` — exact for every activation/softcap combination, no
+hand-written derivatives to get wrong.
+
+flash_attention's backward recomputes through the XLA chunked-attention
+formulation (numerically the same math); a dedicated Pallas backward
+kernel is the natural next optimization on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.epilogue import Epilogue
+from repro.core.geometry import TPU_V5E, solve_block_geometry
+from repro.core.tile_state import SEW
+
+__all__ = ["mte_gemm_ad", "grouped_gemm_ad", "flash_attention_ad"]
+
+
+def _solve(m, n, k, dt_in, dt_out, policy):
+    return solve_block_geometry(m, n, k, SEW.from_dtype(dt_in),
+                                SEW.from_dtype(dt_out), profile=TPU_V5E,
+                                policy=policy)
+
+
+def _raw_gemm(a, b, policy, interpret, out_dtype=jnp.float32):
+    """Plain A@B through the MTE kernel (no epilogue)."""
+    from repro.kernels.mte_gemm import mte_gemm_pallas
+    m, k = a.shape
+    n = b.shape[1]
+    geom = _solve(m, n, k, a.dtype, out_dtype, policy)
+    if geom.transposed_b:
+        b = b.T
+    return mte_gemm_pallas(a, b, geom=geom, epilogue=Epilogue(),
+                           out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
+                out_dtype, interpret: bool, has_c: bool, has_bias: bool):
+    """Differentiable fused GEMM.  c/bias are zero-size placeholders when
+    unused (custom_vjp needs a static pytree structure)."""
+    from repro.kernels.mte_gemm import mte_gemm_pallas
+    m, k = a.shape
+    n = b.shape[1]
+    geom = _solve(m, n, k, a.dtype, out_dtype, policy)
+    bm = b.T if geom.transposed_b else b
+    return mte_gemm_pallas(a, bm,
+                           c=c if has_c else None,
+                           bias=bias if has_bias else None,
+                           geom=geom, epilogue=epilogue,
+                           out_dtype=out_dtype, interpret=interpret)
+
+
+def _gemm_fwd(a, b, c, bias, epilogue, policy, out_dtype, interpret,
+              has_c, has_bias):
+    out = mte_gemm_ad(a, b, c, bias, epilogue, policy, out_dtype,
+                      interpret, has_c, has_bias)
+    return out, (a, b, c, bias)
+
+
+def _gemm_bwd(epilogue, policy, out_dtype, interpret, has_c, has_bias,
+              res, g):
+    a, b, c, bias = res
+    # Recompute the accumulator with the kernel (flash-style remat).
+    acc = _raw_gemm(a, b, policy, interpret)
+
+    def epi(acc_, c_, bias_):
+        return epilogue.apply(acc_, c_in=c_ if has_c else None,
+                              bias=bias_ if has_bias else None
+                              ).astype(out_dtype)
+
+    _, epi_vjp = jax.vjp(epi, acc, c, bias)
+    dacc, dc, dbias = epi_vjp(g)
+    dacc = dacc.astype(a.dtype)
+    # The backward GEMMs run through the same MTE kernel.
+    da = _raw_gemm(dacc, b.T, policy, interpret).astype(a.dtype)
+    db = _raw_gemm(a.T, dacc, policy, interpret).astype(b.dtype)
+    return (da, db,
+            dc.astype(c.dtype) if has_c else jnp.zeros_like(c),
+            dbias.astype(bias.dtype) if has_bias else jnp.zeros_like(bias))
+
+
+mte_gemm_ad.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool):
+    from repro.kernels.grouped_gemm import grouped_gemm_pallas
+    g, cap, k = x.shape
+    n = w.shape[2]
+    geom = _solve(cap, n, k, x.dtype, out_dtype, "mte")
+    return grouped_gemm_pallas(x, w, geom=geom, epilogue=epilogue,
+                               out_dtype=out_dtype, interpret=interpret)
+
+
+def _grouped_fwd(x, w, epilogue, out_dtype, interpret):
+    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret), (x, w)
+
+
+def _grouped_bwd(epilogue, out_dtype, interpret, res, g):
+    from repro.kernels.grouped_gemm import grouped_gemm_pallas
+    x, w = res
+    gg, cap, k = x.shape
+    n = w.shape[2]
+    geom = _solve(cap, n, k, x.dtype, jnp.float32, "mte")
+    acc = grouped_gemm_pallas(x, w, geom=geom, epilogue=Epilogue(),
+                              out_dtype=jnp.float32, interpret=interpret)
+    _, epi_vjp = jax.vjp(lambda a: epilogue.apply(a).astype(out_dtype), acc)
+    (dacc,) = epi_vjp(g)
+    dacc = dacc.astype(x.dtype)
+    wt = jnp.swapaxes(w, 1, 2)
+    geom_dx = _solve(cap, k, n, dacc.dtype, jnp.float32, "mte")
+    dx = grouped_gemm_pallas(dacc, wt, geom=geom_dx, epilogue=Epilogue(),
+                             out_dtype=jnp.float32,
+                             interpret=interpret).astype(x.dtype)
+    xt = jnp.swapaxes(x, 1, 2)
+    geom_dw = _solve(k, n, cap, xt.dtype, jnp.float32, "mte")
+    dw = grouped_gemm_pallas(xt, dacc, geom=geom_dw, epilogue=Epilogue(),
+                             out_dtype=jnp.float32,
+                             interpret=interpret).astype(w.dtype)
+    return dx, dw
+
+
+grouped_gemm_ad.defvjp(_grouped_fwd, _grouped_bwd)
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_ad(q, k, v, causal: bool, window: Optional[int],
+                       softcap: Optional[float], scale: Optional[float],
+                       interpret: bool):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, scale, interpret):
+    out = flash_attention_ad(q, k, v, causal, window, softcap, scale,
+                             interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, scale, interpret, res, g):
+    from repro.models.attention import _xla_attention
+    q, k, v = res
+    d = q.shape[-1]
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    def ref(q_, k_, v_):
+        return _xla_attention(q_, k_, v_, causal=causal, window=window,
+                              softcap=softcap, scale=s)
+
+    _, vjp = jax.vjp(ref, q, k, v)
+    return vjp(g)
+
+
+flash_attention_ad.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,135 @@
+"""Flash-decode Pallas kernel: single-token attention over a long KV cache.
+
+Decode attention is the paper's degenerate-GEMM case pushed to the limit —
+one query row against a 32k-524k KV cache, with ring-buffer position
+semantics for sliding-window layers.  §Perf pair 2 showed GSPMD cannot
+sequence-shard this well (softmax all-reduces); the kernel-level answer is
+an explicit blocked pass over the cache with online softmax, positions
+supplied as data (the ring cache's slot→absolute-position map), grouped
+GQA so KV heads are never repeated.
+
+Layout: q (B, H, D) one token per sequence; k/v (B, Hkv, S, D);
+kv_positions (B, S) int32 (−1 ⇒ unwritten slot); q_pos (B,) int32.
+Grid: (B·Hkv, gkv) — each program owns one (batch, kv-head) pair and all
+its G = H/Hkv query heads; the kv axis is walked sequentially with the
+online-softmax carry in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.geometry import cdiv
+
+__all__ = ["flash_decode_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kvpos_ref, qpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, gkv: int, bkv: int,
+            window: Optional[int], softcap: Optional[float], scale: float):
+    ikv = pl.program_id(1)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (G', D)
+    k = k_ref[0].astype(jnp.float32)              # (bkv, D)
+    kvpos = kvpos_ref[0]                          # (bkv,)
+    qpos = qpos_ref[0, 0]                         # scalar
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G', bkv)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    mask = (kvpos >= 0) & (kvpos <= qpos)
+    if window is not None:
+        mask = mask & (kvpos > qpos - window)
+    mask = jnp.broadcast_to(mask[None, :], logits.shape)
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = jnp.broadcast_to(
+        alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True),
+        l_ref.shape)
+    v = v_ref[0].astype(jnp.float32)
+    if True:  # zero ragged/unwritten V rows: 0·NaN = NaN under interpret
+        vmask = (kvpos >= 0)[:, None]
+        v = jnp.where(vmask, v, jnp.zeros_like(v))
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ikv == gkv - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "block_kv",
+                              "interpret"))
+def flash_decode_pallas(q, k, v, kv_positions, q_pos, *,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        block_kv: int = 512, interpret: bool = True):
+    """One-token attention.  q (B,H,D); k/v (B,Hkv,S,D);
+    kv_positions (B,S); q_pos (B,).  Returns (B, H, D) in q.dtype."""
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = h // hkv
+    gp = max(8, g)  # pad query-head group to the sublane minimum
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, hkv, g, d)
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    qg = qg.reshape(b * hkv, gp, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+
+    bkv = min(block_kv, max(128, cdiv(s, 128) * 128))
+    gkv = cdiv(s, bkv)
+    # pad position maps so OOB kv slots read as -1 (masked)
+    pad = gkv * bkv - s
+    kvp = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+    qp = q_pos.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, gkv=gkv, bkv=bkv, window=window,
+                               softcap=softcap, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, gkv),
+        in_specs=[
+            pl.BlockSpec((1, gp, d), lambda bn, ikv: (bn, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bn, ikv: (bn, ikv, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bn, ikv: (bn, ikv, 0)),
+            pl.BlockSpec((1, bkv), lambda bn, ikv: (bn // hkv, ikv)),
+            pl.BlockSpec((1, 1), lambda bn, ikv: (bn // hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gp, d), lambda bn, ikv: (bn, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, gp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((gp, 128), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+            pltpu.VMEM((gp, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kr, vr, kvp, qp)
+    return out.reshape(b, hkv, gp, d)[:, :, :g].reshape(b, h, d)

@@ -1,0 +1,91 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each wrapper solves the MTE block geometry for the incoming shapes/dtypes
+(the ``tss`` request→grant handshake) and invokes the corresponding
+``pallas_call``.  ``interpret`` defaults to True off-TPU so the same entry
+points run under CPU tests and compile to Mosaic on real hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.epilogue import Epilogue
+from repro.core.geometry import TPU_V5E, solve_block_geometry
+from repro.core.tile_state import SEW
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_gemm import grouped_gemm_pallas
+from repro.kernels.mte_gemm import mte_gemm_pallas
+from repro.kernels.rigid_gemm import rigid_gemm_pallas
+
+__all__ = ["mte_gemm", "grouped_gemm", "flash_attention",
+           "flash_decode", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
+             policy: str = "mte", out_dtype=jnp.float32,
+             interpret: Optional[bool] = None):
+    """Geometry-agnostic GEMM.  ``policy='amx'`` routes to the rigid
+    baseline.  Differentiable: backward runs as two more MTE GEMMs plus
+    the epilogue's jnp vjp (kernels/autodiff.py)."""
+    from repro.kernels.autodiff import mte_gemm_ad
+    interpret = _default_interpret(interpret)
+    if policy == "amx":
+        return rigid_gemm_pallas(a, b, c=c, bias=bias, epilogue=epilogue,
+                                 out_dtype=out_dtype, interpret=interpret)
+    m, k = a.shape
+    n = b.shape[1]
+    has_c, has_bias = c is not None, bias is not None
+    c_ = c if has_c else jnp.zeros((m, n), jnp.float32)
+    bias_ = bias if has_bias else jnp.zeros((n,), jnp.float32)
+    return mte_gemm_ad(a, b, c_, bias_, epilogue, policy, out_dtype,
+                       interpret, has_c, has_bias)
+
+
+def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
+                 out_dtype=jnp.float32, interpret: Optional[bool] = None):
+    """Per-expert GEMM: x (G, C, K) @ w (G, K, N) -> (G, C, N).
+    Differentiable (kernels/autodiff.py)."""
+    from repro.kernels.autodiff import grouped_gemm_ad
+    interpret = _default_interpret(interpret)
+    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Blocked attention with MTE-solved q/kv block sizes."""
+    interpret = _default_interpret(interpret)
+    sq, skv, d = q.shape[2], k.shape[2], q.shape[3]
+    from repro.kernels.autodiff import flash_attention_ad
+    return flash_attention_ad(q, k, v, causal, window, softcap, scale,
+                              interpret)
+
+
+def flash_decode(q, k, v, kv_positions, q_pos, *, window=None, softcap=None,
+                 scale=None, interpret: Optional[bool] = None):
+    """Single-token attention over a (ring) KV cache — serving hot path."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    interpret = _default_interpret(interpret)
+    return flash_decode_pallas(q, k, v, kv_positions, q_pos, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=interpret)
+
+
+def rglru_scan(a, b, *, interpret: Optional[bool] = None):
+    """RG-LRU linear recurrence h_t = a_t·h_{t-1} + b_t (serving path)."""
+    from repro.kernels.rglru_scan import rglru_scan_pallas
+    interpret = _default_interpret(interpret)
+    return rglru_scan_pallas(a, b, interpret=interpret)

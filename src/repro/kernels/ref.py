@@ -1,0 +1,116 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against
+(interpret mode on CPU, compiled Mosaic on TPU).  They use only jnp ops in
+f32 accumulation — no Pallas, no blocking — so a numerics bug in a kernel
+cannot hide in a shared code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.epilogue import Epilogue
+
+__all__ = ["mte_gemm", "grouped_gemm", "flash_attention", "flash_decode"]
+
+
+def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
+             out_dtype=jnp.float32, b_transposed: bool = False):
+    """Oracle for mte_gemm / rigid_gemm: f32-accumulated dot + epilogue."""
+    if b_transposed:
+        b = b.T
+    acc_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    acc = jnp.dot(a, b, preferred_element_type=acc_dtype)
+    out = epilogue.apply(acc, c_in=c, bias=bias)
+    return out.astype(out_dtype)
+
+
+def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
+                 out_dtype=jnp.float32):
+    """Oracle for the MoE grouped GEMM.
+
+    x: (G, cap, K); w: (G, K, N) → (G, cap, N).
+    """
+    acc = jnp.einsum("gck,gkn->gcn", x, w,
+                     preferred_element_type=jnp.float32)
+    out = epilogue.apply(acc)
+    return out.astype(out_dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None):
+    """Oracle for the blocked attention kernel.
+
+    q: (B, H, Sq, D); k/v: (B, Hkv, Skv, D) with H % Hkv == 0 (GQA).
+    ``window`` is a sliding-attention width: position i attends to
+    [i - window + 1, i] (implies causal masking within the window).
+    Returns (B, H, Sq, D) in q.dtype.
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    skv = k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned q positions
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_decode(q, k, v, kv_positions, q_pos, *, window=None, softcap=None,
+                 scale=None):
+    """Oracle for the flash-decode kernel.
+
+    q (B,H,D); k/v (B,Hkv,S,D); kv_positions (B,S) (−1 ⇒ unwritten);
+    q_pos (B,).  Returns (B,H,D)."""
+    b, h, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kp = kv_positions[:, None, :]
+    qp = q_pos[:, None, None]
+    mask = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    return jnp.einsum("bhk,bhkd->bhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan(a, b):
+    """Oracle for the RG-LRU recurrence kernel: h_t = a_t·h_{t-1} + b_t."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                         (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

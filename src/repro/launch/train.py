@@ -1,0 +1,141 @@
+"""Training launcher.
+
+Composes: config → mesh → sharded init (or elastic checkpoint restore) →
+jit'd train step (donated buffers) → data pipeline → async checkpointing →
+watchdog + supervisor fault handling.
+
+Examples::
+
+    # CPU-scale smoke training (reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch gemma_2b --reduced \
+        --steps 50 --batch 8 --seq 128
+
+    # Supervised run with restart-on-failure:
+    PYTHONPATH=src python -m repro.launch.train --arch gemma_2b --reduced \
+        --steps 200 --supervise --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticDataset
+from repro.distributed import sharding as sh
+from repro.distributed.fault import StepWatchdog, supervise
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import model as model_lib
+from repro.optim.optimizer import AdamWConfig, init_opt_state
+from repro.training.trainer import make_train_step
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
+               microbatches: int = 1, ckpt_dir=None, ckpt_every: int = 50,
+               step_timeout_s: float = 600.0, mesh=None, log=print,
+               seed: int = 0):
+    mesh = mesh or make_elastic_mesh(model_parallel=1)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps)
+    data = SyntheticDataset(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                       global_batch=batch, seed=seed))
+    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+
+    with jax.set_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda: model_lib.init_params(jax.random.PRNGKey(seed), cfg))
+        p_spec = sh.param_specs(cfg, params_shape, mesh)
+        p_shard = sh.named_shardings(mesh, p_spec)
+
+        start_step = 0
+        if ckpt and ckpt.latest_step() is not None:
+            opt_shape = jax.eval_shape(init_opt_state, params_shape)
+            o_shard = sh.named_shardings(
+                mesh, {"m": p_spec, "v": p_spec,
+                       "step": jax.sharding.PartitionSpec()})
+            params, opt_state, manifest = ckpt.restore(
+                None, (params_shape, opt_shape), (p_shard, o_shard))
+            start_step = int(manifest["step"])
+            data = SyntheticDataset.restore(
+                data.cfg, manifest["extra"].get("data", data.state()))
+            log(f"[train] restored step {start_step} "
+                f"(elastic mesh {dict(zip(mesh.axis_names, mesh.devices.shape))})")
+        else:
+            init_fn = jax.jit(
+                lambda key: model_lib.init_params(key, cfg),
+                out_shardings=p_shard)
+            params = init_fn(jax.random.PRNGKey(seed))
+            opt_state = jax.jit(init_opt_state)(params)
+
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, microbatches),
+                          donate_argnums=(0, 1))
+        watchdog = StepWatchdog(step_timeout_s)
+
+        losses = []
+        for step in range(start_step, steps):
+            watchdog.check()
+            watchdog.arm()
+            batch_data = data.batch(step)
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 batch_data)
+            loss = float(metrics["loss"])
+            watchdog.disarm()
+            losses.append(loss)
+            if step % 10 == 0 or step == steps - 1:
+                log(f"[train] step {step} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({time.time() - t0:.2f}s)")
+            if np.isnan(loss):
+                raise FloatingPointError(f"NaN loss at step {step}")
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save_async(step + 1, params, opt_state,
+                                extra={"data": data.state()})
+        if ckpt:
+            ckpt.save(steps, params, opt_state,
+                      extra={"data": data.state()})
+            ckpt.wait()
+        watchdog.stop()
+        return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--supervise", action="store_true")
+    ap.add_argument("--gemm-backend", default=None,
+                    choices=[None, "xla", "pallas"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.gemm_backend:
+        cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
+
+    def run(attempt: int):
+        train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                   lr=args.lr, microbatches=args.microbatches,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+
+    if args.supervise:
+        supervise(run)
+    else:
+        run(0)
+
+
+if __name__ == "__main__":
+    main()

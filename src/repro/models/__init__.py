@@ -1,0 +1,1 @@
+"""Model zoo: composable decoder layers + the 10 assigned architectures."""

@@ -1,0 +1,308 @@
+"""GQA/MQA attention: training forward, prefill, and cached decode.
+
+Feature set per the assigned architectures: grouped/multi-query KV heads,
+RoPE, QK-norm (chameleon, qwen3), attention logit soft-capping (gemma2),
+sliding windows (gemma2 local layers, starcoder2, recurrentgemma), explicit
+head_dim override (gemma family), QKV bias (qwen1.5).
+
+Sliding-window decode uses a *ring* cache of ``window`` slots so long_500k
+decode holds O(window) state, never O(S) — the sub-quadratic requirement.
+Training/prefill use the flash kernel when ``cfg.gemm_backend == 'pallas'``
+and an equivalent jnp formulation for pjit/dry-run graphs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, init_norm, rmsnorm, rope
+
+__all__ = ["init_attention", "attention", "init_attn_cache", "decode_attention"]
+
+_NEG_INF = -1e30
+
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "q": init_dense(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "k": init_dense(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "v": init_dense(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "o": init_dense(ks[3], cfg.n_heads * hd, d, dtype=dt,
+                        scale=(cfg.n_heads * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, "rmsnorm", dt)
+        p["k_norm"] = init_norm(hd, "rmsnorm", dt)
+    return p
+
+
+def _project_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = dense(x, p["q"], cfg).reshape(b, s, cfg.n_heads, hd)
+    k = dense(x, p["k"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(x, p["v"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+_CHUNK_THRESHOLD = 2048  # switch to the scanned formulation above this Skv
+_KV_CHUNK = 1024
+
+
+def _grouped_logits(q, k, scale, softcap):
+    """QK logits without materializing repeated KV heads (GQA).
+
+    q: (B, Hkv, G, Sq, D); k: (B, Hkv, Skv, D) → (B, Hkv, G, Sq, Skv) f32.
+    """
+    logits = jnp.einsum("bngqd,bnkd->bngqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def _mask(qp, kp, causal, window):
+    m = kp >= 0
+    if causal:
+        m = m & (kp <= qp)
+    if window is not None:
+        m = m & (kp > qp - window)
+    return m
+
+
+def _xla_attention(q, k, v, *, causal, window, softcap, scale,
+                   kv_positions=None, q_positions=None,
+                   chunk: int = _KV_CHUNK):
+    """jnp attention (BHSD layout) with the same mask semantics as the
+    flash kernel; used in pjit graphs where Mosaic cannot lower on CPU.
+
+    GQA runs as a grouped einsum (KV heads never materialized H-wide).
+    Long sequences switch to a KV-chunked online-softmax scan with an
+    inner rematerialization checkpoint — flash-attention memory behaviour
+    expressed in XLA, which is what makes 32k-token prefill and 4k training
+    of the large dense archs fit in HBM.
+    """
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    skv = k.shape[2]
+    qg = q.reshape(b, hkv, g, sq, hd)
+    # Normalize positions to batched (B, S) form (per-sequence decode
+    # positions are what continuous batching needs).
+    if q_positions is None:
+        q_positions = jnp.arange(sq) + (skv - sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+    q_positions = jnp.broadcast_to(jnp.atleast_2d(q_positions), (b, sq))
+    kv_positions = jnp.broadcast_to(jnp.atleast_2d(kv_positions), (b, skv))
+
+    if skv > _CHUNK_THRESHOLD:
+        out = _chunked_attention(qg, k, v, q_positions, kv_positions,
+                                 causal=causal, window=window,
+                                 softcap=softcap, scale=scale, chunk=chunk)
+        return out.reshape(b, h, sq, hd)
+
+    logits = _grouped_logits(qg, k, scale, softcap)
+    mask = _mask(q_positions[:, :, None], kv_positions[:, None, :],
+                 causal, window)
+    logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngqk,bnkd->bngqd", probs, v)
+    return out.reshape(b, h, sq, hd)
+
+
+def _chunked_attention(qg, k, v, q_positions, kv_positions, *, causal,
+                       window, softcap, scale, chunk: int = _KV_CHUNK):
+    """Online-softmax scan over KV chunks (flash semantics in XLA).
+
+    qg: (B, Hkv, G, Sq, D); k/v: (B, Hkv, Skv, D).  The chunk body is
+    wrapped in jax.checkpoint so backward recomputes the (…, Sq, chunk)
+    logits instead of storing them — O(Sq·chunk) live memory.
+    """
+    b, hkv, g, sq, hd = qg.shape
+    skv = k.shape[2]
+    nc = -(-skv // chunk)
+    pad = nc * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+
+    ks = k.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    kps = kv_positions.reshape(b, nc, chunk).transpose(1, 0, 2)
+    qp = q_positions[:, :, None]
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, kp_blk = xs
+        logits = _grouped_logits(qg, k_blk, scale, softcap)
+        mask = _mask(qp, kp_blk[:, None, :], causal, window)
+        emask = mask[:, None, None]
+        logits = jnp.where(emask, logits, _NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(emask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bngqk,bnkd->bngqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hkv, g, sq, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, sq, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (ks, vs, kps))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).astype(qg.dtype)
+
+
+def attention(x, p, cfg, positions, *, window: Optional[int] = None,
+              return_kv: bool = False):
+    """Full-sequence causal attention (training / prefill forward)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.hd ** -0.5
+    if cfg.gemm_backend == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window,
+            softcap=cfg.attn_softcap, scale=scale)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = _xla_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window,
+            softcap=cfg.attn_softcap, scale=scale,
+            chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+        out = out.transpose(0, 2, 1, 3)
+    y = dense(out.reshape(b, s, -1), p["o"], cfg)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# -- decode (cached) ----------------------------------------------------------
+
+
+def _quantize_kv(x):
+    """Symmetric int8 per-(token, head) quantization.  x: (..., hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_attn_cache(cfg, batch: int, seq_len: int, window: Optional[int],
+                    dtype):
+    """KV cache.  Global layers hold seq_len slots; local layers hold a
+    ``window``-slot ring (O(window) memory — long-context requirement).
+    ``cfg.cache_quant`` stores int8 values + per-(token, head) f32 scales
+    (≈ 0.56× the bf16 footprint — a serving-memory optimization)."""
+    length = min(window, seq_len) if window else seq_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.hd)
+    if getattr(cfg, "cache_quant", False):
+        sshape = (batch, length, cfg.n_kv_heads, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(x, p, cfg, cache, pos, *, window: Optional[int] = None):
+    """One-token decode step.  x: (B, 1, D); pos: scalar int32 or (B,)
+    per-sequence positions (continuous batching).  Returns (out, cache)."""
+    b = x.shape[0]
+    hd = cfg.hd
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _project_qkv(x, p, cfg, pos_b[:, None])
+    length = cache["k"].shape[1]
+    slot_b = pos_b % length  # == pos_b for global layers (pos < cache len)
+    quant = "k_scale" in cache
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k[:, 0])
+        vq, vs = _quantize_kv(v[:, 0])
+        rows = jnp.arange(b)
+        new_cache["k"] = cache["k"].at[rows, slot_b].set(kq)
+        new_cache["k_scale"] = cache["k_scale"].at[rows, slot_b].set(ks)
+        new_cache["v"] = cache["v"].at[rows, slot_b].set(vq)
+        new_cache["v_scale"] = cache["v_scale"].at[rows, slot_b].set(vs)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        knew = _dequantize_kv(new_cache["k"], new_cache["k_scale"], cdt)
+        vnew = _dequantize_kv(new_cache["v"], new_cache["v_scale"], cdt)
+    else:
+        knew = cache["k"].at[jnp.arange(b), slot_b].set(
+            k[:, 0].astype(cache["k"].dtype))
+        vnew = cache["v"].at[jnp.arange(b), slot_b].set(
+            v[:, 0].astype(cache["v"].dtype))
+        new_cache["k"], new_cache["v"] = knew, vnew
+
+    idx = jnp.arange(length)[None, :]
+    if window:
+        # ring: slot i holds absolute position pos - ((pos - i) mod length)
+        kv_positions = pos_b[:, None] - (pos_b[:, None] - idx) % length
+    else:
+        kv_positions = jnp.where(idx <= pos_b[:, None], idx, -1)
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    if cfg.gemm_backend == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_decode(
+            q[:, 0], knew.transpose(0, 2, 1, 3), vnew.transpose(0, 2, 1, 3),
+            kv_positions, pos_b, window=window, softcap=cfg.attn_softcap,
+            scale=scale)
+        out = out[:, None]  # (B, 1, H, hd) layout below
+        out = out.reshape(b, 1, -1)
+    else:
+        out = _xla_attention(
+            q.transpose(0, 2, 1, 3), knew.transpose(0, 2, 1, 3),
+            vnew.transpose(0, 2, 1, 3), causal=True, window=window,
+            softcap=cfg.attn_softcap, scale=scale,
+            kv_positions=kv_positions,
+            q_positions=pos_b[:, None],
+            chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+        out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return dense(out, p["o"], cfg), new_cache
+
+
+def prefill_cache(k, v, cfg, seq_len: int, window: Optional[int], dtype
+                  ) -> Tuple[dict, None]:
+    """Build a decode cache from prefill K/V (B, S, kv, hd)."""
+    b, s = k.shape[0], k.shape[1]
+    length = min(window, seq_len) if window else seq_len
+    if window and s >= length:
+        # keep the last `length` positions at their ring slots
+        start = s - length
+        ksl, vsl = k[:, start:], v[:, start:]
+        slots = (jnp.arange(length) + start) % length
+        order = jnp.argsort(slots)
+        kf, vf = ksl[:, order], vsl[:, order]
+    else:
+        pad = length - s
+        kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if getattr(cfg, "cache_quant", False):
+        kq, ks = _quantize_kv(kf)
+        vq, vs = _quantize_kv(vf)
+        return {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+    return {"k": kf.astype(dtype), "v": vf.astype(dtype)}

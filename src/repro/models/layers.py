@@ -1,0 +1,185 @@
+"""Shared neural-net layers.  Every projection routes through the MTE
+dispatch layer so the paper's technique is a first-class feature of the
+whole framework (``cfg.gemm_backend``: "xla" inside pjit graphs / dry-run,
+"pallas" for kernel-backed execution).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.epilogue import ACTIVATIONS, Epilogue
+
+__all__ = ["dense", "rmsnorm", "layernorm", "norm", "init_norm", "rope",
+           "init_dense", "mlp", "init_mlp", "init_embedding", "embed",
+           "unembed", "ffn_param_specs"]
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(x, p, cfg, *, activation: str = "none"):
+    """``act(x @ w + b)`` via the MTE dispatch layer.
+
+    x: (..., d_in).  The Pallas path fuses bias+activation in-kernel (the
+    paper's vector-mode epilogue); the XLA path expresses the same epilogue
+    as jnp ops for GSPMD graphs, where XLA performs the fusion.
+    """
+    cdt = _cdt(cfg)
+    w = p["w"].astype(cdt)
+    b = p.get("b")
+    xc = x.astype(cdt)
+    if cfg.gemm_backend == "pallas":
+        from repro.kernels import ops
+        lead = xc.shape[:-1]
+        x2 = xc.reshape(-1, xc.shape[-1])
+        epi = Epilogue(has_bias=b is not None, activation=activation)
+        y = ops.mte_gemm(x2, w, bias=(b.astype(jnp.float32)
+                                      if b is not None else None),
+                         epilogue=epi, policy=cfg.gemm_policy,
+                         out_dtype=cdt)
+        return y.reshape(*lead, -1)
+    y = jnp.einsum("...d,df->...f", xc, w,
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    y = ACTIVATIONS[activation](y)
+    return y.astype(cdt)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rmsnorm(x, p, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(x, p, kind: str):
+    return layernorm(x, p) if kind == "layernorm" else rmsnorm(x, p)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- feed-forward -------------------------------------------------------------
+
+
+def init_mlp(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "gate": init_dense(ks[0], d, f, bias=cfg.mlp_bias, dtype=dt),
+            "up": init_dense(ks[1], d, f, bias=cfg.mlp_bias, dtype=dt),
+            "down": init_dense(ks[2], f, d, bias=cfg.mlp_bias, dtype=dt,
+                               scale=f ** -0.5),
+        }
+    return {
+        "up": init_dense(ks[0], d, f, bias=cfg.mlp_bias, dtype=dt),
+        "down": init_dense(ks[1], f, d, bias=cfg.mlp_bias, dtype=dt,
+                           scale=f ** -0.5),
+    }
+
+
+def mlp(x, p, cfg):
+    if cfg.mlp_type == "swiglu":
+        g = dense(x, p["gate"], cfg, activation="silu")
+        u = dense(x, p["up"], cfg)
+        return dense(g * u, p["down"], cfg)
+    if cfg.mlp_type == "geglu":
+        g = dense(x, p["gate"], cfg, activation="gelu")
+        u = dense(x, p["up"], cfg)
+        return dense(g * u, p["down"], cfg)
+    h = dense(x, p["up"], cfg, activation="gelu")
+    return dense(h, p["down"], cfg)
+
+
+def ffn_param_specs(cfg):
+    """Names of the mlp weight matrices (for sharding policy lookups)."""
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return ("gate", "up", "down")
+    return ("up", "down")
+
+
+# -- embeddings ---------------------------------------------------------------
+
+
+def init_embedding(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"table": jax.random.normal(key, (cfg.vocab, cfg.d_model), dt) * 0.02}
+    if not cfg.tied_embeddings:
+        p["head"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab), dt
+        ) * cfg.d_model ** -0.5
+    return p
+
+
+def embed(tokens, p, cfg):
+    x = jnp.take(p["table"], tokens, axis=0).astype(_cdt(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(x, p, cfg):
+    """LM head → f32 logits (optionally final-softcapped, gemma2)."""
+    cdt = _cdt(cfg)
+    if cfg.tied_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x.astype(cdt),
+                            p["table"].astype(cdt),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x.astype(cdt),
+                            p["head"].astype(cdt),
+                            preferred_element_type=jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

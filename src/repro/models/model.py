@@ -1,0 +1,367 @@
+"""Decoder-stack assembly for all 10 assigned architectures.
+
+The layer pattern of an ``ArchConfig`` is tiled into *groups* (one period
+each); the group stack is executed with ``lax.scan`` over stacked group
+params (small HLO, enables XLA's collective/compute overlap inside the
+scanned body) plus an explicitly-unrolled tail for layer counts that do not
+divide the period (e.g. recurrentgemma's 38 = 12·3 + 2).  Activation
+rematerialization wraps the group body per ``cfg.remat``.
+
+Three entry points:
+- ``forward``  — training forward → logits (+ MoE aux loss)
+- ``prefill``  — forward that also returns the decode cache
+- ``decode``   — single-token cached step
+
+Cache pytrees mirror the params pytree: ``{"groups": stacked, "tail": [..]}``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
+                                 mlp, norm, unembed)
+
+__all__ = ["init_params", "forward", "prefill", "decode", "init_cache",
+           "loss_fn", "param_count"]
+
+
+# -- init ---------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig, kinds) -> Dict[str, Any]:
+    mixer_kind, ffn_kind = kinds
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm_type, dt)}
+    if mixer_kind in ("attn", "local"):
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg)
+    elif mixer_kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+    elif mixer_kind == "ssd":
+        p["mixer"] = ssm_mod.init_ssd(ks[0], cfg)
+    if ffn_kind != "none":
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm_type, dt)
+        p["ffn"] = (moe_mod.init_moe(ks[1], cfg) if ffn_kind == "moe"
+                    else init_mlp(ks[1], cfg))
+    if cfg.post_norms:
+        p["post_norm1"] = init_norm(cfg.d_model, cfg.norm_type, dt)
+        if ffn_kind != "none":
+            p["post_norm2"] = init_norm(cfg.d_model, cfg.norm_type, dt)
+    return p
+
+
+def _group_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(number of scanned full groups, number of tail layers)."""
+    if not cfg.scan_layers:
+        return 0, cfg.n_layers
+    return cfg.n_layers // cfg.period, cfg.n_layers % cfg.period
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    n_groups, n_tail = _group_layout(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    kinds = cfg.layer_kinds
+
+    groups = None
+    if n_groups:
+        per_group = []
+        for g in range(n_groups):
+            layer_ps = [
+                _init_layer(keys[g * cfg.period + j], cfg, kinds[g * cfg.period + j])
+                for j in range(cfg.period)
+            ]
+            per_group.append(layer_ps)
+        groups = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+
+    tail = [_init_layer(keys[n_groups * cfg.period + j], cfg,
+                        kinds[n_groups * cfg.period + j])
+            for j in range(n_tail)]
+
+    return {
+        "embedding": init_embedding(keys[-2], cfg),
+        "groups": groups,
+        "tail": tail,
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type,
+                                jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# -- one layer ----------------------------------------------------------------
+
+
+def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
+                 cache=None, pos=None, cache_len: Optional[int] = None):
+    """Returns (x, new_cache, aux)."""
+    mixer_kind, ffn_kind = kinds
+    window = cfg.window if mixer_kind == "local" else None
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+
+    h = norm(x, lp["norm1"], cfg.norm_type)
+    if mixer_kind in ("attn", "local"):
+        if mode == "decode":
+            out, new_cache = attn_mod.decode_attention(
+                h, lp["mixer"], cfg, cache, pos, window=window)
+        elif mode == "prefill":
+            out, (k, v) = attn_mod.attention(
+                h, lp["mixer"], cfg, positions, window=window, return_kv=True)
+            new_cache = attn_mod.prefill_cache(
+                k, v, cfg, cache_len or positions.shape[-1], window,
+                jnp.dtype(cfg.compute_dtype))
+        else:
+            out = attn_mod.attention(h, lp["mixer"], cfg, positions,
+                                     window=window)
+    elif mixer_kind == "rglru":
+        if mode == "decode":
+            out, new_cache = rglru_mod.rglru_decode(h, lp["mixer"], cfg, cache)
+        elif mode == "prefill":
+            out, new_cache = rglru_mod.rglru_forward(h, lp["mixer"], cfg,
+                                                     return_cache=True)
+        else:
+            out = rglru_mod.rglru_forward(h, lp["mixer"], cfg)
+    elif mixer_kind == "ssd":
+        if mode == "decode":
+            out, new_cache = ssm_mod.ssd_decode(h, lp["mixer"], cfg, cache)
+        elif mode == "prefill":
+            out, new_cache = ssm_mod.ssd_forward(h, lp["mixer"], cfg,
+                                                 return_cache=True)
+        else:
+            out = ssm_mod.ssd_forward(h, lp["mixer"], cfg)
+    else:
+        raise ValueError(mixer_kind)
+
+    if cfg.post_norms:
+        out = norm(out, lp["post_norm1"], cfg.norm_type)
+    x = x + out
+
+    if ffn_kind != "none":
+        h = norm(x, lp["norm2"], cfg.norm_type)
+        if ffn_kind == "moe":
+            out, aux = _moe_dispatch(h, lp["ffn"], cfg)
+        else:
+            out = mlp(h, lp["ffn"], cfg)
+        if cfg.post_norms:
+            out = norm(out, lp["post_norm2"], cfg.norm_type)
+        x = x + out
+    return x, new_cache, aux
+
+
+def _moe_dispatch(h, ffn_params, cfg: ArchConfig):
+    """Route to the configured MoE implementation.
+
+    ``a2a`` (the beyond-paper §Perf optimization) needs an ambient mesh
+    with a "model" axis and a sequence divisible by it; otherwise fall back
+    to the GSPMD scatter path (also the single-device smoke-test path).
+    """
+    if cfg.moe_impl == "a2a":
+        am = jax.sharding.get_abstract_mesh()
+        if (am is not None and not getattr(am, "empty", True)
+                and "model" in am.axis_names
+                and h.shape[1] % am.shape["model"] == 0):
+            return moe_mod.apply_moe_a2a(h, ffn_params, cfg, mesh=am)
+    return moe_mod.apply_moe(h, ffn_params, cfg)
+
+
+# -- stack --------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
+               cache=None, pos=None, cache_len: Optional[int] = None):
+    """Scan the group stack + unrolled tail.  Returns (x, new_cache, aux)."""
+    n_groups, n_tail = _group_layout(cfg)
+    kinds = cfg.layer_kinds
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"groups": None, "tail": []}
+
+    if n_groups:
+        has_cache = mode in ("prefill", "decode")
+
+        def group_body(carry, xs):
+            from repro.distributed.sharding import constrain
+            xc, auxc = carry
+            # Pin the scan carry (and its saved-for-backward residuals) to
+            # batch sharding — inference can drift to weight-style sharding.
+            xc = constrain(xc, ("pod", "data"), None, None)
+            gp = xs[0] if has_cache and mode == "decode" else xs
+            gc = xs[1] if has_cache and mode == "decode" else None
+            caches_out = []
+            for j in range(cfg.period):
+                layer_cache = gc[j] if gc is not None else None
+                xc, c_new, aux = _apply_layer(
+                    xc, _index_tree(gp, j), cfg, kinds[j], positions, mode,
+                    cache=layer_cache, pos=pos, cache_len=cache_len)
+                caches_out.append(c_new)
+                auxc = auxc + aux
+            ys = tuple(caches_out) if has_cache else None
+            return (xc, auxc), ys
+
+        body = _remat(group_body, cfg)
+        if mode == "decode":
+            xs = (params["groups"], cache["groups"])
+        else:
+            xs = params["groups"]
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if mode in ("prefill", "decode"):
+            new_cache["groups"] = ys
+
+    for j in range(n_tail):
+        idx = n_groups * cfg.period + j
+        layer_cache = cache["tail"][j] if (cache and mode == "decode") else None
+        x, c_new, aux = _apply_layer(
+            x, params["tail"][j], cfg, kinds[idx], positions, mode,
+            cache=layer_cache, pos=pos, cache_len=cache_len)
+        aux_total = aux_total + aux
+        if mode in ("prefill", "decode"):
+            new_cache["tail"].append(c_new)
+
+    return x, new_cache, aux_total
+
+
+def _index_tree(tree, j: int):
+    """Select position-j layer params out of a per-group params structure."""
+    return tree[j] if isinstance(tree, (list, tuple)) else tree
+
+
+# -- entry points --------------------------------------------------------------
+
+
+def _inputs_to_x(batch, params, cfg: ArchConfig):
+    from repro.distributed.sharding import constrain
+    if cfg.frontend_stub:
+        x = batch["embeddings"].astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        x = embed(tokens, params["embedding"], cfg)
+        b, s = tokens.shape
+    return constrain(x, ("pod", "data"), None, None), b, s
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Training forward: → (logits f32 (B, S, V), aux loss)."""
+    from repro.distributed.sharding import constrain
+    x, b, s = _inputs_to_x(batch, params, cfg)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x, _, aux = _run_stack(x, params, cfg, positions, "train")
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = unembed(x, params["embedding"], cfg)
+    # Keep the (B, S, V) logits sharded batch×vocab — unconstrained they
+    # replicate and 1M tokens × 256k vocab × f32 is petabytes.
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, aux
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None):
+    """Prefill: → (last-position logits (B, V), cache).
+
+    ``cache_len`` sets the decode capacity of the returned KV caches
+    (defaults to the prefill length — pass the serving max_seq_len when
+    decode steps will follow)."""
+    x, b, s = _inputs_to_x(batch, params, cfg)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x, cache, _ = _run_stack(x, params, cfg, positions, "prefill",
+                             cache_len=cache_len)
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = unembed(x[:, -1:], params["embedding"], cfg)
+    return logits[:, 0], cache
+
+
+def decode(params, batch, cache, cfg: ArchConfig):
+    """One-token decode: → (logits (B, V), new_cache).
+
+    ``batch["pos"]`` is a scalar or a (B,) vector of per-sequence positions
+    (continuous batching: slots sit at different depths)."""
+    pos = batch["pos"]
+    x, b, s = _inputs_to_x(batch, params, cfg)
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
+    x, new_cache, _ = _run_stack(x, params, cfg, positions, "decode",
+                                 cache=cache, pos=pos)
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = unembed(x, params["embedding"], cfg)
+    return logits[:, 0], new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    """Zero decode cache for all layers (fixed-capacity)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    n_groups, n_tail = _group_layout(cfg)
+    kinds = cfg.layer_kinds
+
+    def layer_cache(kind):
+        mixer = kind[0]
+        if mixer in ("attn", "local"):
+            window = cfg.window if mixer == "local" else None
+            return attn_mod.init_attn_cache(cfg, batch, seq_len, window, cdt)
+        if mixer == "rglru":
+            return rglru_mod.init_rglru_cache(cfg, batch, cdt)
+        if mixer == "ssd":
+            return ssm_mod.init_ssd_cache(cfg, batch, cdt)
+        raise ValueError(mixer)
+
+    groups = None
+    if n_groups:
+        one_group = tuple(layer_cache(kinds[j]) for j in range(cfg.period))
+        groups = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one_group)
+    tail = [layer_cache(kinds[n_groups * cfg.period + j])
+            for j in range(n_tail)]
+    return {"groups": groups, "tail": tail}
+
+
+# -- loss ----------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Next-token cross entropy (+ MoE aux).  Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg)
+    if cfg.frontend_stub:
+        targets = batch["targets"]
+        valid = jnp.ones_like(targets, jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        valid = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    # nll = logsumexp(logits) − logits[target], with the target picked via a
+    # mask-and-sum instead of take_along_axis: a gather along the
+    # model-sharded vocab dim would force GSPMD to replicate the (B, S, V)
+    # logits, and the logsumexp form never materializes full log-probs.
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == targets[..., None]).astype(logits.dtype)
+    target_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - target_logit
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    ce = jnp.sum(nll * valid) / denom
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux,
+                  "tokens": denom}

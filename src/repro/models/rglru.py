@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Block structure: two linear branches from the input; one passes through a
+GeLU (the gate branch), the other through a short causal temporal conv and
+the Real-Gated Linear Recurrent Unit; the products merge through an output
+projection.
+
+RG-LRU recurrence (per channel)::
+
+    r_t = σ(W_a x_t + b_a)            # recurrence gate
+    i_t = σ(W_x x_t + b_x)            # input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t · x_t)
+
+Training/prefill evaluate the recurrence with an associative scan
+(log-depth); decode is a single O(1) state update — the recurrence is pure
+element-wise "vector processing mode" work in MTE terms (no GEMM), while
+all the surrounding projections run through the MTE dispatch layer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+__all__ = ["init_rglru", "rglru_forward", "init_rglru_cache", "rglru_decode"]
+
+
+def _width(cfg) -> int:
+    return cfg.rglru.width or cfg.d_model
+
+
+def init_rglru(key, cfg):
+    d, w = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "gate_proj": init_dense(ks[0], d, w, dtype=dt),     # GeLU branch
+        "rec_proj": init_dense(ks[1], d, w, dtype=dt),      # recurrent branch
+        "conv_w": jax.random.normal(ks[2], (cfg.rglru.conv_width, w), dt) * 0.1,
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": init_dense(ks[3], w, w, bias=True, dtype=dt),
+        "wx": init_dense(ks[4], w, w, bias=True, dtype=dt),
+        "lam": jnp.full((w,), 0.65, dt),  # softplus(Λ) ≈ 1.07 at init
+        "out_proj": init_dense(ks[5], w, d, dtype=dt, scale=w ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _gates(x, p, cfg):
+    """log_a (B, S, W) and gated input (B, S, W), both f32."""
+    r = jax.nn.sigmoid(dense(x, p["wa"], cfg).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(x, p["wx"], cfg).astype(jnp.float32))
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated = i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_forward(x, p, cfg, *, return_cache: bool = False):
+    """x: (B, S, D) → (B, S, D)."""
+    gate = dense(x, p["gate_proj"], cfg, activation="gelu")
+    u_raw = dense(x, p["rec_proj"], cfg)
+    u = _causal_conv(u_raw.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32),
+                     p["conv_b"].astype(jnp.float32)).astype(u_raw.dtype)
+
+    log_a, gated = _gates(u, p, cfg)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if cfg.gemm_backend == "pallas" and return_cache:
+        # serving path (no autodiff): the Pallas sequential-scan kernel
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, b)
+    else:
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = dense(gate * h.astype(x.dtype), p["out_proj"], cfg)
+    if return_cache:
+        w = cfg.rglru.conv_width
+        tail = u_raw[:, -w:]
+        pad = w - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"h": h[:, -1], "conv": tail}
+    return out
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    w = _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width, w), dtype),
+    }
+
+
+def rglru_decode(x, p, cfg, cache) -> Tuple[jax.Array, dict]:
+    """One-token step.  x: (B, 1, D)."""
+    gate = dense(x, p["gate_proj"], cfg, activation="gelu")
+    u = dense(x, p["rec_proj"], cfg)  # (B, 1, W)
+    conv = jnp.concatenate(
+        [cache["conv"][:, 1:], u.astype(cache["conv"].dtype)], axis=1)
+    u = (jnp.einsum("bwc,wc->bc", conv.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+         + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+
+    log_a, gated = _gates(u, p, cfg)
+    a = jnp.exp(log_a[:, 0])
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 1e-12)) * gated[:, 0]
+    h = a * cache["h"] + b
+    out = dense(gate * h[:, None].astype(x.dtype), p["out_proj"], cfg)
+    return out, {"h": h, "conv": conv}

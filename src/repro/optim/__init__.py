@@ -1,0 +1,2 @@
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_opt_state
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state"]

@@ -1,0 +1,148 @@
+"""Serving engine: KV-cache management + continuous batching.
+
+A compact production-shaped server:
+
+- fixed-capacity decode **slots** (the static shapes pjit needs),
+- ``submit()`` queues requests; the scheduler admits them into free slots
+  by running a (per-request) prefill and writing its cache into the slot,
+- ``step()`` runs one batched decode for all active slots,
+- finished sequences (EOS or max_tokens) free their slot immediately —
+  continuous batching, not static batching.
+
+Sampling: greedy or temperature.  Everything jit-compiled once per
+(batch-capacity, cache-length) — request churn never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
+                 cache_len: int = 512, prefill_len: int = 128,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.prefill_len = prefill_len
+        self._key = jax.random.PRNGKey(seed)
+
+        self.cache = model_lib.init_cache(cfg, slots, cache_len)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+        self._prefill = jax.jit(
+            lambda p, b: model_lib.prefill(p, b, cfg, cache_len=cache_len))
+        self._decode = jax.jit(
+            lambda p, b, c: model_lib.decode(p, b, c, cfg))
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        """Run until all submitted requests finish (or step budget)."""
+        for _ in range(max_steps):
+            self._admit()
+            if not any(r is not None for r in self.slot_req):
+                if not self.queue:
+                    break
+                continue
+            self.step()
+        live = self.queue + [s for s in self.slot_req if s is not None]
+        return {r.rid: r.output for r in self.completed + live}
+
+    # -- scheduler ------------------------------------------------------------
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = np.asarray(req.prompt, np.int32)[-self.prefill_len:]
+            pad = self.prefill_len - len(prompt)
+            tokens = np.pad(prompt, (pad, 0))  # left-pad to static shape
+            logits, cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(tokens[None])})
+            tok = self._sample(logits, req)[0]
+            req.output.append(int(tok))
+            self._write_slot(slot, cache)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = self.prefill_len
+            self._finished(slot)
+
+    def step(self):
+        """One batched decode step over all slots.  Per-slot positions ride
+        in ``pos`` (B,) — slots at different depths decode together
+        (continuous batching) with static shapes, so no recompiles."""
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.output:
+                tokens[slot, 0] = req.output[-1]
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(tokens),
+                          "pos": jnp.asarray(self.slot_pos)}, self.cache)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(self._sample(logits[slot: slot + 1], req)[0])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self._finished(slot)
+
+    # -- helpers ---------------------------------------------------------------
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / req.temperature, axis=-1))
+
+    def _finished(self, slot: int):
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
+        if len(req.output) >= req.max_tokens or hit_eos:
+            req.done = True
+            self.completed.append(req)
+            self.slot_req[slot] = None
+
+    def _write_slot(self, slot: int, cache_one):
+        """Copy a single-sequence prefill cache into batch slot ``slot``.
+
+        Cache leaves are either group-stacked (G, B, ...) — batch at axis
+        1 — or per-tail-layer (B, ...) — batch at axis 0."""
+        def per_leaf(path, full, one):
+            names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path]
+            axis = 1 if "groups" in names else 0
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=axis)
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            per_leaf, self.cache, cache_one)

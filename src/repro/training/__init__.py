@@ -1,0 +1,2 @@
+from repro.training.trainer import make_eval_step, make_train_step
+__all__ = ["make_eval_step", "make_train_step"]

@@ -1,0 +1,74 @@
+"""Train-step construction: loss → grads → clip → AdamW, with optional
+gradient-accumulation microbatching (single deferred reduction) and
+donated buffers.
+
+``make_train_step(cfg, opt_cfg, microbatches)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with explicit in/out shardings (see launch/train.py and
+launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.optim.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    def loss_fn(params, mb):
+        return model_lib.loss_fn(params, mb, cfg)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch
+                   ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, mb):
+                gsum, msum = carry
+                (loss, m), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                msum = jax.tree.map(jnp.add, msum, m)
+                return (gsum, msum), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mzero = {"loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                     "aux": jnp.zeros(()), "tokens": jnp.zeros(())}
+            (gsum, msum), _ = jax.lax.scan(acc_body, (zeros, mzero), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = {k: (v if k == "tokens" else v / microbatches)
+                       for k, v in msum.items()}
+            loss = metrics["loss"]
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        params2, opt_state2, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        loss, metrics = model_lib.loss_fn(params, batch, cfg)
+        return metrics
+    return eval_step

@@ -1,0 +1,72 @@
+"""Unit tests for the dry-run tooling itself (collective parser, specs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Importing repro.launch.dryrun appends the 512-device XLA flag to the
+# environment; lock the backend to this process's real device count FIRST
+# so the flag cannot leak into other tests' jax initialization.
+jax.devices()
+
+
+def test_collective_parser_on_synthetic_hlo():
+    from repro.launch import dryrun
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(f32[8,256]{1,0} %p0), replica_groups={}
+  %ar.1 = bf16[64]{0} all-reduce(bf16[64]{0} %p1), to_apply=%add
+  %rs = f32[4,4]{1,0} reduce-scatter(f32[16,4]{1,0} %p2), dimensions={0}
+  %a2a = s8[32,32]{1,0} all-to-all(s8[32,32]{1,0} %p3), dimensions={0}
+  %cp = f32[2,2]{1,0} collective-permute(f32[2,2]{1,0} %p4)
+  %dot = f32[8,8]{1,0} dot(f32[8,4]{1,0} %a, f32[4,8]{1,0} %b)
+"""
+    out = dryrun.collective_bytes(hlo)
+    assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["all-reduce"] == 1
+    assert out["counts"]["reduce-scatter"] == 1
+    assert out["counts"]["all-to-all"] == 1
+    assert out["counts"]["collective-permute"] == 1
+    # operand bytes: ag 8*256*4, ar 64*2, rs 16*4*4, a2a 32*32, cp 2*2*4
+    assert out["bytes_per_device"]["all-gather"] == 8 * 256 * 4
+    assert out["bytes_per_device"]["all-reduce"] == 128
+    assert out["bytes_per_device"]["all-to-all"] == 1024
+    assert out["total_bytes_per_device"] == sum(
+        out["bytes_per_device"].values())
+
+
+def test_collective_parser_ignores_async_done_and_compute():
+    from repro.launch import dryrun
+    hlo = """
+  %ags = f32[64]{0} all-gather-start(f32[8]{0} %x)
+  %agd = f32[64]{0} all-gather-done(f32[64]{0} %ags)
+  %conv = f32[1,8,8,4]{3,2,1,0} convolution(f32[1,8,8,2]{3,2,1,0} %i, f32[3,3,2,4]{3,2,1,0} %k)
+"""
+    out = dryrun.collective_bytes(hlo)
+    assert out["counts"]["all-gather"] == 1  # -start counted, -done is a move
+    assert out["bytes_per_device"]["all-gather"] == 32
+
+
+def test_model_flops_accounting():
+    from benchmarks.roofline import model_flops
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("gemma_2b")
+    n = cfg.n_active_params()
+    t = SHAPES["train_4k"]
+    assert model_flops("gemma_2b", "train_4k") == \
+        6.0 * n * t.global_batch * t.seq_len
+    # MoE uses ACTIVE params (much smaller than total)
+    q = get_config("qwen3_moe_235b")
+    assert q.n_active_params() < 0.2 * q.n_params()
+
+
+def test_roofline_row_identifies_dominant_term():
+    from benchmarks.roofline import roofline_row
+    rec = {
+        "status": "ok", "arch": "gemma_2b", "shape": "train_4k",
+        "multi_pod": False, "n_devices": 256,
+        "cost_analysis": {"flops_per_device": 1e15, "bytes_per_device": 1e11},
+        "collectives": {"total_bytes_per_device": 1e9},
+        "memory_analysis": {"temp_bytes": 1e9},
+    }
+    row = roofline_row(rec)
+    assert row["dominant"] == "compute"
+    assert 0 < row["roofline_fraction"] <= 1.5

@@ -1,0 +1,67 @@
+"""REQUIRED per-arch smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and no NaNs (assignment spec)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import model as model_lib
+from repro.optim.optimizer import AdamWConfig, init_opt_state
+from repro.training.trainer import make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key, b=B, s=S):
+    if cfg.frontend_stub:
+        return {
+            "embeddings": jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.float32) * 0.1,
+            "targets": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        }
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(key, cfg)
+    logits, aux = model_lib.forward(params, _batch(cfg, key), cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert np.all(np.isfinite(logits)), f"{arch}: non-finite logits"
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = model_lib.init_params(key, cfg)
+    opt_state = init_opt_state(params)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3, total_steps=10))
+    params2, opt2, metrics = jax.jit(step)(params, opt_state,
+                                           _batch(cfg, key))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: NaN loss"
+    # loss ≈ ln(vocab) at random init
+    assert 0.5 * np.log(cfg.vocab) < loss < 3.0 * np.log(cfg.vocab)
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params2),
+                                jax.tree.leaves(params)))
+    assert delta > 0
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_count_formula_matches_init(arch):
+    """cfg.n_params() (used for 6·N·D roofline bookkeeping) tracks the real
+    initialized parameter count."""
+    cfg = get_config(arch).reduced()
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    actual = model_lib.param_count(params)
+    predicted = cfg.n_params()
+    assert abs(actual - predicted) / actual < 0.05, (actual, predicted)

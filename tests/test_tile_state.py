@@ -1,0 +1,62 @@
+"""MTE CSR (paper §III-B): bit-accurate encode/decode + tss grant semantics."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.tile_state import MAX_DIM, SEW, TailPolicy, TileState
+
+
+def test_paper_field_budget():
+    """Table II: 36 bits dims + 8 bits ttypes + 12 bits rlenb + 8 reserved."""
+    ts = TileState(tm=4096, tn=4096, tk=4096, rlenb=4095)
+    assert ts.encode() < (1 << 56)  # everything fits below the reserved byte
+
+
+def test_sew_encoding():
+    assert SEW.E8.bits == 8 and SEW.E64.bits == 64
+    assert SEW.from_bits(16) is SEW.E16
+    assert SEW.from_dtype("float32") is SEW.E32
+    with pytest.raises(ValueError):
+        SEW.from_bits(12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    tm=st.integers(1, MAX_DIM), tn=st.integers(1, MAX_DIM),
+    tk=st.integers(1, MAX_DIM),
+    sew_i=st.sampled_from(list(SEW)), sew_o=st.sampled_from(list(SEW)),
+    pol_i=st.sampled_from(list(TailPolicy)),
+    pol_o=st.sampled_from(list(TailPolicy)),
+    rlenb=st.integers(0, 4095),
+)
+def test_csr_roundtrip(tm, tn, tk, sew_i, sew_o, pol_i, pol_o, rlenb):
+    ts = TileState(tm=tm, tn=tn, tk=tk, sew_i=sew_i, sew_o=sew_o,
+                   policy_i=pol_i, policy_o=pol_o, rlenb=rlenb)
+    word = ts.encode()
+    assert 0 <= word < (1 << 64)
+    assert TileState.decode(word) == ts
+
+
+@settings(max_examples=100, deadline=None)
+@given(request=st.integers(0, 10_000), hw_max=st.integers(1, 4096))
+def test_tss_grant_is_min(request, hw_max):
+    """tss returns min(request, microarchitecture max) — §III-C1.
+    A zero grant is returned but never written to the CSR."""
+    granted, ts = TileState().tssm(request, hw_max)
+    assert granted == min(request, hw_max, MAX_DIM)
+    assert ts.tm == (granted if granted else 1)
+    granted_n, ts = ts.tssn(request, hw_max)
+    granted_k, ts = ts.tssk(request, hw_max)
+    if granted_n:
+        assert ts.tn == granted_n
+    if granted_k:
+        assert ts.tk == granted_k
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        TileState(tm=5000)
+    with pytest.raises(ValueError):
+        TileState(tm=0)
+    with pytest.raises(ValueError):
+        TileState(rlenb=5000)
