@@ -4,10 +4,30 @@ Prints ``name,us_per_call,derived`` CSV rows (one per table entry) followed
 by the human-readable tables.  ``us_per_call`` is the modeled execution
 time of the workload/aggregate on the evaluated architecture;``derived`` is
 the table's headline metric (efficiency %, speedup ×, reduction ×, ...).
+
+Also writes ``BENCH_gemm.json`` (``{name: {us_per_call, derived}}``) so
+the perf trajectory is machine-trackable across PRs, including
+fixed-analytic vs autotuned plan timings for the tall/skinny decode GEMMs
+the plan cache targets.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+# Runnable as a plain script (`python benchmarks/run.py`): put the repo
+# root and src/ on sys.path so `benchmarks.*` and `repro.*` import.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# Decode / tall-skinny shapes for the analytic-vs-autotuned comparison.
+AUTOTUNE_SHAPES = [
+    ("decode_m1_n4096_k4096", 1, 4096, 4096),
+    ("tall_skinny_m16_n256_k4096", 16, 256, 4096),
+]
 
 
 def main() -> None:
@@ -86,6 +106,18 @@ def main() -> None:
     csv_rows.append(("kernel.mte_gemm.256x256x256.interpret",
                      f"{dt * 1e6:.1f}", "correctness-path"))
 
+    # -- autotune: fixed analytic plan vs measured plan-cache winner -------------
+    # (interpret mode on CPU — the measured refinement runs on whatever
+    # substrate executes the kernels, so the winner is substrate-honest.)
+    from repro.core import autotune
+    for name, m, n, k in AUTOTUNE_SHAPES:
+        r = autotune.benchmark_shape(m, n, k)
+        csv_rows.append((f"autotune.{name}.analytic",
+                         f"{r['analytic_us']:.1f}", "fixed-plan"))
+        csv_rows.append((f"autotune.{name}.autotuned",
+                         f"{r['autotuned_us']:.1f}",
+                         f"{r['speedup']:.2f}x,{r['route']}"))
+
     # -- roofline (if dry-run artifacts exist) --------------------------------------
     try:
         from benchmarks.roofline import print_table, roofline_table
@@ -104,6 +136,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us},{derived}")
+
+    bench = {name: {"us_per_call": float(us) if us else None,
+                    "derived": derived}
+             for name, us, derived in csv_rows}
+    with open("BENCH_gemm.json", "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    print(f"wrote BENCH_gemm.json ({len(bench)} entries)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -5,10 +5,16 @@ Layout:
 - ``geometry``    — Formula 2/3 tile solvers + TPU BlockSpec solver (§III-A).
 - ``epilogue``    — vector-processing-mode epilogues (§III-C4).
 - ``dispatch``    — ``mte_gemm`` public entry point.
+- ``autotune``    — plan cache: per-signature candidate search (geometry
+                    neighbours, transposed-B, split-K, grouped) + LRU
+                    memoization + JSON warm-start for serving.
 - ``isa``         — retired-instruction accounting (Table IX).
 - ``perfmodel``   — analytical machine model (§V-E simulator analogue).
 - ``conv``        — direct convolution → MTE GEMM lowering (§V-B1).
 """
+from repro.core.autotune import (
+    ExecutionPlan, GemmSignature, PlanCache, get_plan, plan_cache,
+)
 from repro.core.dispatch import GemmPlan, mte_gemm, plan_gemm
 from repro.core.epilogue import Epilogue
 from repro.core.geometry import (
@@ -19,6 +25,7 @@ from repro.core.tile_state import SEW, TailPolicy, TileState
 
 __all__ = [
     "GemmPlan", "mte_gemm", "plan_gemm", "Epilogue",
+    "ExecutionPlan", "GemmSignature", "PlanCache", "get_plan", "plan_cache",
     "PROFILES", "TPU_V5E", "BlockGeometry", "HardwareProfile", "TpuProfile",
     "max_tile_dims", "solve_block_geometry", "solve_unroll",
     "SEW", "TailPolicy", "TileState",

@@ -12,6 +12,13 @@ Here the same decomposition drives ``mte_gemm``: for every kernel offset
 the (IC, OC) weight slice, accumulated into the output.  The α/β/bias/
 activation epilogue is applied once on the final accumulation, fused —
 the matrix↔vector interplay of §III-C4.
+
+All KH·KW offset GEMMs share one (M, N, K) signature, so on the
+kernel-backed path (``backend="pallas"``) the autotune plan cache
+(:mod:`repro.core.autotune`) solves the schedule once for the whole
+convolution — small-OC layers whose (M, N) grid underfills the machine
+get the split-K route automatically.  The default ``backend="xla"``
+executes a fused dot and skips planning (see ``dispatch.py``).
 """
 from __future__ import annotations
 

@@ -1,19 +1,41 @@
 """Public MTE GEMM entry point — the framework's "instruction set".
 
 ``mte_gemm`` is the single GEMM surface the whole framework (models,
-convolutions, MoE experts, attention projections) calls into.  It plays the
-role the MTE ISA plays in the paper: callers state *what* they want
-(operand shapes, dtypes, epilogue) and the dispatch layer *grants* an
-execution geometry from the hardware profile (``solve_block_geometry``,
-Formula 2/3 generalized) and routes to a backend:
+convolutions, MoE experts, attention projections, the serving engine)
+calls into.  It plays the role the MTE ISA plays in the paper: callers
+state *what* they want (operand shapes, dtypes, epilogue) and the
+dispatch layer *grants* an execution plan and routes to a backend:
 
-- ``backend="pallas"``      — the Pallas TPU kernel (interpret=True on CPU,
-                              compiled Mosaic on a real TPU).
+- ``backend="pallas"``      — kernel-backed execution (interpret=True on
+                              CPU, compiled Mosaic on a real TPU).
 - ``backend="xla"``         — plain jnp.dot + fused-by-XLA epilogue.  Used
                               inside pjit'd training/serving graphs and for
                               the multi-pod dry-run (Mosaic cannot lower on
                               the CPU backend).
 - ``backend="reference"``   — the pure-jnp oracle from kernels/ref.py.
+
+**Plan-cache request→grant flow** (the ``tss`` handshake, memoized):
+every kernel-backed call builds a
+:class:`repro.core.autotune.GemmSignature` from its operands (in
+``kernels/ops.py`` / ``kernels/autodiff.py``) and asks the
+process-global plan cache for an
+:class:`~repro.core.autotune.ExecutionPlan`.  The first request for a
+signature enumerates candidate plans — MTE block-geometry neighbours
+around the analytic ``solve_block_geometry`` point, the transposed-B
+layout of Formula 3, split-K with solver-chosen ``n_split`` for
+tall/skinny shapes (decode GEMVs: M ≤ 32 or N ≤ 32 with deep K), grouped
+batching — scores them with :func:`repro.core.perfmodel.tpu_gemm_time`,
+and memoizes the winner; every later request is a cache hit that skips
+the solver entirely.  The granted route changes which kernel launches:
+the MTE block schedule, split-K, the rigid baseline, or (after measured
+refinement) the fused XLA dot.  The XLA/reference backends execute a
+single fused dot regardless, so they skip planning entirely — XLA
+schedules its own tiling.
+
+**Adding a new candidate kernel route**: see the module docstring of
+:mod:`repro.core.autotune` — emit the candidate geometry there, name the
+route, teach ``autotune.execute_plan`` / ``kernels/ops.py`` /
+``kernels/autodiff.py`` to launch it; dispatch needs no changes.
 
 Geometry/ISA statistics are available via ``plan_gemm`` for benchmarks,
 without running anything — the analytical path the paper's Table IX and
@@ -71,7 +93,7 @@ def mte_gemm(a, b, c=None, bias=None, *,
              backend: str = _DEFAULT_BACKEND,
              out_dtype=None,
              interpret: bool = True):
-    """Compute ``epilogue(a @ b [, c, bias])`` with MTE geometry selection.
+    """Compute ``epilogue(a @ b [, c, bias])`` with a plan-cached schedule.
 
     a: (M, K); b: (K, N); optional c: (M, N) when ``epilogue.beta != 0``;
     optional bias: (N,) or (M,) per ``epilogue.bias_axis``.
@@ -86,6 +108,11 @@ def mte_gemm(a, b, c=None, bias=None, *,
     if out_dtype is None:
         out_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.int8) else a.dtype
 
+    # Request→grant happens where the grant changes which kernel
+    # launches: the pallas path consults the plan cache in
+    # kernels/ops.py + kernels/autodiff.py (one plan per signature;
+    # repeat calls are cache hits).  The XLA/reference paths execute a
+    # single fused dot regardless, so no plan is solved for them.
     if backend == "pallas":
         from repro.kernels import ops
         return ops.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,

@@ -233,7 +233,8 @@ class TpuGemmTiming:
 
 
 def tpu_gemm_time(geom: BlockGeometry, m: int, n: int, k: int,
-                  profile: TpuProfile = TPU_V5E) -> TpuGemmTiming:
+                  profile: TpuProfile = TPU_V5E,
+                  n_cores: int = 1) -> TpuGemmTiming:
     """Model a Pallas block schedule on the TPU profile.
 
     compute: padded FLOPs (block-rounded dims) / MXU peak — padding waste is
@@ -241,13 +242,25 @@ def tpu_gemm_time(geom: BlockGeometry, m: int, n: int, k: int,
     memory: HBM traffic of the grid schedule: A tiles are streamed once per
     N-block column, B tiles once per M-block row, C written once (plus read
     when beta != 0 handled by caller).
+
+    ``n_cores`` models grid occupancy across a multi-core slice: the
+    parallel work units of a schedule are the ``gm·gn·split_k`` independent
+    output (or partial) tiles — the K loop within one tile is a sequential
+    accumulation chain.  When fewer parallel tiles exist than cores, both
+    the attainable FLOP rate and the aggregate HBM streaming rate scale by
+    the occupancy fraction; this is the term that makes split-K profitable
+    for the paper's tall/skinny shapes (M or N ≤ 32, deep K), where the
+    (M, N) grid alone leaves most of the machine idle.  ``n_cores=1``
+    (default) reproduces the single-core model exactly.
     """
     gm, gn, gk = geom.grid_for(m, n, k)
     pm, pn, pk = gm * geom.bm, gn * geom.bn, gk * geom.bk
     padded_flops = 2 * pm * pn * pk
     useful_flops = 2 * m * n * k
     peak = profile.peak_flops(geom.sew_i)
-    compute_s = padded_flops / peak
+    parallel_tiles = gm * gn * max(geom.split_k, 1)
+    occupancy = min(1.0, parallel_tiles / max(n_cores, 1))
+    compute_s = padded_flops / (peak * occupancy)
 
     a_bytes = pm * pk * geom.sew_i.bytes * gn     # A re-streamed per N column
     b_bytes = pk * pn * geom.sew_i.bytes * gm     # B re-streamed per M row
@@ -255,7 +268,7 @@ def tpu_gemm_time(geom: BlockGeometry, m: int, n: int, k: int,
     if geom.split_k > 1:
         c_bytes += pm * pn * 4 * geom.split_k      # f32 partials round-trip
     hbm = a_bytes + b_bytes + c_bytes
-    memory_s = hbm / profile.hbm_bw_bytes_per_s
+    memory_s = hbm / (profile.hbm_bw_bytes_per_s * occupancy)
 
     return TpuGemmTiming(geom=geom, m=m, n=n, k=k, compute_s=compute_s,
                          memory_s=memory_s, useful_flops=useful_flops,

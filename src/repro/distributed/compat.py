@@ -1,0 +1,56 @@
+"""Portability layer for the jax mesh/sharding API.
+
+The framework targets the current explicit-sharding API (``jax.set_mesh``
++ ``jax.sharding.get_abstract_mesh``); older jax releases (0.4.x) expose
+the same machinery under private names (``jax._src.mesh``) and via the
+``Mesh`` context manager.  Everything mesh-ambient in this repo goes
+through these two functions so the rest of the code is version-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["get_abstract_mesh", "set_mesh", "shard_map"]
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or an empty mesh outside any context."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.get_abstract_mesh()
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient (+abstract) mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+
+    from jax._src import mesh as mesh_lib
+
+    @contextlib.contextmanager
+    def _ctx():
+        with mesh, mesh_lib.set_abstract_mesh(mesh.abstract_mesh):
+            yield mesh
+
+    return _ctx()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across the spelling drift of its import path and
+    its replication-check flag (``check_vma`` today, ``check_rep`` on
+    0.4/0.5)."""
+    import inspect
+
+    try:
+        from jax import shard_map as _sm
+    except ImportError:  # older spelling
+        from jax.experimental.shard_map import shard_map as _sm
+    flag = ("check_vma" if "check_vma"
+            in inspect.signature(_sm).parameters else "check_rep")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               **{flag: check})

@@ -28,46 +28,52 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.epilogue import Epilogue
-from repro.core.geometry import TPU_V5E, solve_block_geometry
-from repro.core.tile_state import SEW
 
 __all__ = ["mte_gemm_ad", "grouped_gemm_ad", "flash_attention_ad"]
 
 
-def _solve(m, n, k, dt_in, dt_out, policy):
-    return solve_block_geometry(m, n, k, SEW.from_dtype(dt_in),
-                                SEW.from_dtype(dt_out), profile=TPU_V5E,
-                                policy=policy)
+def _plan(m, n, k, dt_in, dt_out, policy, epilogue=None, group=1):
+    """Fetch (or solve+memoize) the execution plan from the global cache."""
+    from repro.core import autotune
+    return autotune.get_plan(m, n, k, dt_in, dt_out, epilogue=epilogue,
+                             policy=policy, backend="pallas", group=group)
+
+
+def _run_plan(plan, a, b, c, bias, interpret):
+    """Launch the planned route — one launcher for fwd and bwd GEMMs.
+
+    Delegates to :func:`repro.core.autotune.execute_plan` so every route
+    (mte block schedule, split-K, post-measurement XLA fallback) has a
+    single launch implementation; epilogue/out_dtype come from the
+    plan's signature, which the callers built from the same values.
+    """
+    from repro.core.autotune import execute_plan
+    return execute_plan(plan, a, b, c, bias, interpret=interpret)
 
 
 def _raw_gemm(a, b, policy, interpret, out_dtype=jnp.float32):
-    """Plain A@B through the MTE kernel (no epilogue)."""
-    from repro.kernels.mte_gemm import mte_gemm_pallas
+    """Plain A@B through the planned MTE route (no epilogue).  Backward
+    GEMMs go through the same plan cache as forward ones, so e.g. the
+    dgrad of a decode projection gets its own split-K plan."""
     m, k = a.shape
     n = b.shape[1]
-    geom = _solve(m, n, k, a.dtype, out_dtype, policy)
-    if geom.transposed_b:
-        b = b.T
-    return mte_gemm_pallas(a, b, geom=geom, epilogue=Epilogue(),
-                           out_dtype=out_dtype, interpret=interpret)
+    plan = _plan(m, n, k, a.dtype, out_dtype, policy)
+    return _run_plan(plan, a, b, None, None, interpret)
 
 
 @functools.partial(jax.custom_vjp,
                    nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
                 out_dtype, interpret: bool, has_c: bool, has_bias: bool):
-    """Differentiable fused GEMM.  c/bias are zero-size placeholders when
-    unused (custom_vjp needs a static pytree structure)."""
-    from repro.kernels.mte_gemm import mte_gemm_pallas
+    """Differentiable fused GEMM routed through the autotune plan cache.
+    c/bias are zero-size placeholders when unused (custom_vjp needs a
+    static pytree structure)."""
     m, k = a.shape
     n = b.shape[1]
-    geom = _solve(m, n, k, a.dtype, out_dtype, policy)
-    bm = b.T if geom.transposed_b else b
-    return mte_gemm_pallas(a, bm,
-                           c=c if has_c else None,
-                           bias=bias if has_bias else None,
-                           geom=geom, epilogue=epilogue,
-                           out_dtype=out_dtype, interpret=interpret)
+    plan = _plan(m, n, k, a.dtype, out_dtype, policy, epilogue=epilogue)
+    return _run_plan(plan, a, b,
+                     c if has_c else None,
+                     bias if has_bias else None, interpret)
 
 
 def _gemm_fwd(a, b, c, bias, epilogue, policy, out_dtype, interpret,
@@ -110,8 +116,9 @@ def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool):
     from repro.kernels.grouped_gemm import grouped_gemm_pallas
     g, cap, k = x.shape
     n = w.shape[2]
-    geom = _solve(cap, n, k, x.dtype, out_dtype, "mte")
-    return grouped_gemm_pallas(x, w, geom=geom, epilogue=epilogue,
+    plan = _plan(cap, n, k, x.dtype, out_dtype, "mte", epilogue=epilogue,
+                 group=g)
+    return grouped_gemm_pallas(x, w, geom=plan.geometry, epilogue=epilogue,
                                out_dtype=out_dtype, interpret=interpret)
 
 
@@ -124,19 +131,21 @@ def _grouped_bwd(epilogue, out_dtype, interpret, res, g):
     x, w = res
     gg, cap, k = x.shape
     n = w.shape[2]
-    geom = _solve(cap, n, k, x.dtype, jnp.float32, "mte")
+    geom = _plan(cap, n, k, x.dtype, jnp.float32, "mte", group=gg).geometry
     acc = grouped_gemm_pallas(x, w, geom=geom, epilogue=Epilogue(),
                               out_dtype=jnp.float32, interpret=interpret)
     _, epi_vjp = jax.vjp(lambda a: epilogue.apply(a).astype(out_dtype), acc)
     (dacc,) = epi_vjp(g)
     dacc = dacc.astype(x.dtype)
     wt = jnp.swapaxes(w, 1, 2)
-    geom_dx = _solve(cap, k, n, dacc.dtype, jnp.float32, "mte")
+    geom_dx = _plan(cap, k, n, dacc.dtype, jnp.float32, "mte",
+                    group=gg).geometry
     dx = grouped_gemm_pallas(dacc, wt, geom=geom_dx, epilogue=Epilogue(),
                              out_dtype=jnp.float32,
                              interpret=interpret).astype(x.dtype)
     xt = jnp.swapaxes(x, 1, 2)
-    geom_dw = _solve(k, n, cap, xt.dtype, jnp.float32, "mte")
+    geom_dw = _plan(k, n, cap, xt.dtype, jnp.float32, "mte",
+                    group=gg).geometry
     dw = grouped_gemm_pallas(xt, dacc, geom=geom_dw, epilogue=Epilogue(),
                              out_dtype=jnp.float32,
                              interpret=interpret).astype(w.dtype)

@@ -1,9 +1,13 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-Each wrapper solves the MTE block geometry for the incoming shapes/dtypes
-(the ``tss`` request→grant handshake) and invokes the corresponding
-``pallas_call``.  ``interpret`` defaults to True off-TPU so the same entry
-points run under CPU tests and compile to Mosaic on real hardware.
+Each wrapper requests an execution plan from the autotune plan cache
+(:mod:`repro.core.autotune`) for the incoming shapes/dtypes — the ``tss``
+request→grant handshake, now memoized and candidate-searched — and
+invokes the granted route's ``pallas_call``: the MTE block-scheduled
+kernel, the split-K kernel for shapes whose (M, N) grid underfills the
+machine, or the rigid baseline.  ``interpret`` defaults to True off-TPU
+so the same entry points run under CPU tests and compile to Mosaic on
+real hardware.
 """
 from __future__ import annotations
 
@@ -13,11 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.epilogue import Epilogue
-from repro.core.geometry import TPU_V5E, solve_block_geometry
-from repro.core.tile_state import SEW
-from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.grouped_gemm import grouped_gemm_pallas
-from repro.kernels.mte_gemm import mte_gemm_pallas
 from repro.kernels.rigid_gemm import rigid_gemm_pallas
 
 __all__ = ["mte_gemm", "grouped_gemm", "flash_attention",
@@ -35,9 +34,12 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
 def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
              policy: str = "mte", out_dtype=jnp.float32,
              interpret: Optional[bool] = None):
-    """Geometry-agnostic GEMM.  ``policy='amx'`` routes to the rigid
-    baseline.  Differentiable: backward runs as two more MTE GEMMs plus
-    the epilogue's jnp vjp (kernels/autodiff.py)."""
+    """Geometry-agnostic GEMM through the autotune plan cache.
+
+    ``policy='amx'`` routes to the rigid baseline; tall/skinny shapes
+    whose planned geometry carries ``split_k > 1`` route to the split-K
+    kernel.  Differentiable: backward runs as two more plan-cached MTE
+    GEMMs plus the epilogue's jnp vjp (kernels/autodiff.py)."""
     from repro.kernels.autodiff import mte_gemm_ad
     interpret = _default_interpret(interpret)
     if policy == "amx":

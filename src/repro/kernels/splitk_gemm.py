@@ -56,15 +56,21 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, k: int, bk: int,
 @functools.partial(
     jax.jit, static_argnames=("geom", "n_split", "epilogue", "out_dtype",
                               "interpret"))
-def mte_gemm_splitk_pallas(a, b, *, geom: BlockGeometry, n_split: int = 4,
+def mte_gemm_splitk_pallas(a, b, c=None, bias=None, *, geom: BlockGeometry,
+                           n_split: int = 4,
                            epilogue: Epilogue = Epilogue(),
                            out_dtype=jnp.float32, interpret: bool = True):
-    """``epilogue(a @ b)`` with the K loop split over ``n_split`` grid
-    slices (f32 partials + final fused reduction)."""
+    """``epilogue(a @ b [, c, bias])`` with the K loop split over
+    ``n_split`` grid slices (f32 partials + final fused reduction; the
+    β·C / bias terms join at the reduction, once, not per partial)."""
     m, k = a.shape
     k2, n = b.shape
     if k2 != k:
         raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    if epilogue.needs_c_input and c is None:
+        raise ValueError("epilogue.beta != 0 requires c operand")
+    if epilogue.has_bias and bias is None:
+        raise ValueError("epilogue.has_bias requires bias operand")
 
     bm = min(geom.bm, max(8, cdiv(m, 8) * 8))
     bn = min(geom.bn, max(128, cdiv(n, 128) * 128))
@@ -89,5 +95,5 @@ def mte_gemm_splitk_pallas(a, b, *, geom: BlockGeometry, n_split: int = 4,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)
-    out = epilogue.apply(jnp.sum(partials, axis=0))
+    out = epilogue.apply(jnp.sum(partials, axis=0), c_in=c, bias=bias)
     return out.astype(out_dtype)

@@ -26,6 +26,7 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticDataset
+from repro.distributed import compat
 from repro.distributed import sharding as sh
 from repro.distributed.fault import StepWatchdog, supervise
 from repro.launch.mesh import make_elastic_mesh
@@ -46,7 +47,7 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
                                        global_batch=batch, seed=seed))
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params_shape = jax.eval_shape(
             lambda: model_lib.init_params(jax.random.PRNGKey(seed), cfg))
         p_spec = sh.param_specs(cfg, params_shape, mesh)

@@ -145,10 +145,8 @@ def apply_moe_a2a(x, p, cfg, *, mesh, ep_axis: str = "model",
     the GSPMD scatter path's cross-shard gathers (EXPERIMENTS.md §Perf).
     """
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map
-    except ImportError:  # older spelling
-        from jax.experimental.shard_map import shard_map
+
+    from repro.distributed.compat import shard_map
 
     m = cfg.moe
     ep = mesh.shape[ep_axis]
@@ -220,6 +218,5 @@ def apply_moe_a2a(x, p, cfg, *, mesh, ep_axis: str = "model",
         local_fn, mesh=mesh,
         in_specs=(x_spec, P(None, None), P(ep_axis, None, None),
                   P(ep_axis, None, None), P(ep_axis, None, None)),
-        out_specs=(x_spec, P()),
-        check_vma=False)
+        out_specs=(x_spec, P()))
     return fn(x, p["router"], p["gate"], p["up"], p["down"])

@@ -15,6 +15,8 @@ Sampling: greedy or temperature.  Everything jit-compiled once per
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Dict, List, Optional
 
 import jax
@@ -42,9 +44,22 @@ class Request:
 class ServingEngine:
     def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
                  cache_len: int = 512, prefill_len: int = 128,
-                 seed: int = 0):
+                 seed: int = 0, plan_cache_path: Optional[str] = None):
         self.params = params
         self.cfg = cfg
+        # Warm-start the GEMM plan cache so the decode hot path starts
+        # with pre-tuned plans instead of re-solving them on first token.
+        # Purely an optimization: a stale/corrupt file must not prevent
+        # the engine from starting cold.
+        self.plan_cache_path = plan_cache_path
+        if plan_cache_path and os.path.exists(plan_cache_path):
+            from repro.core import autotune
+            try:
+                autotune.load_plans(plan_cache_path)
+            except (ValueError, KeyError, TypeError, OSError,
+                    json.JSONDecodeError) as e:
+                print(f"plan-cache warm start skipped "
+                      f"({plan_cache_path}: {e})")
         self.slots = slots
         self.cache_len = cache_len
         self.prefill_len = prefill_len
@@ -64,6 +79,13 @@ class ServingEngine:
     # -- client API -----------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def save_plan_cache(self, path: Optional[str] = None):
+        """Persist tuned GEMM plans for the next process's warm start."""
+        from repro.core import autotune
+        target = path or self.plan_cache_path
+        if target:
+            autotune.save_plans(target)
 
     def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
         """Run until all submitted requests finish (or step budget)."""

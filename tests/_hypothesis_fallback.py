@@ -1,0 +1,117 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this repo use a small slice of the hypothesis API:
+``given`` / ``settings`` decorators and the ``integers`` / ``floats`` /
+``sampled_from`` strategies.  When the real package is available the test
+modules import it; otherwise they fall back to this shim so the properties
+still execute (deterministic pseudo-random sampling, boundary values
+first) instead of the whole module being skipped.
+
+This is intentionally tiny: no shrinking, no database, no assume().  Its
+only job is to keep the property suites running in hermetic environments.
+Install the real ``hypothesis`` (see requirements-dev.txt) for full
+coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    """A sampleable value source with explicit boundary examples."""
+
+    def __init__(self, sample, boundaries):
+        self._sample = sample
+        self.boundaries = list(boundaries)
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     [min_value, max_value])
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = True,
+           allow_infinity: bool = True) -> _Strategy:
+    del allow_nan, allow_infinity  # this shim never generates nan/inf
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     [min_value, max_value])
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    bounds = [elements[0], elements[-1]] if elements else []
+    return _Strategy(lambda rng: rng.choice(elements), bounds)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.choice([False, True]), [False, True])
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+strategies = _StrategiesModule()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Record the example budget on the (already-wrapped) test function."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per generated example.
+
+    The first examples exercise the strategies' boundary values (all-min,
+    then all-max); the rest are drawn from a deterministic RNG seeded by
+    the test name, so failures are reproducible run to run.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            strategies_all = list(arg_strategies) + list(kw_strategies.values())
+            n_bounds = max((len(s.boundaries) for s in strategies_all),
+                           default=0)
+            for i in range(max(1, n)):
+                if i < n_bounds:
+                    draw = [s.boundaries[min(i, len(s.boundaries) - 1)]
+                            if s.boundaries else s.sample(rng)
+                            for s in strategies_all]
+                else:
+                    draw = [s.sample(rng) for s in strategies_all]
+                pos = draw[:len(arg_strategies)]
+                kw = dict(zip(kw_strategies, draw[len(arg_strategies):]))
+                fn(*args, *pos, **kwargs, **kw)
+
+        # Hide the strategy parameters from pytest's fixture collection.
+        # Positional strategies bind to the RIGHTMOST parameters (like
+        # real hypothesis), leaving leading fixture params for pytest.
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in kw_strategies]
+        if arg_strategies:
+            keep = keep[:-len(arg_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco

@@ -1,6 +1,9 @@
 """Formula 2/3 tile solvers + TPU BlockSpec solver invariants."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # hermetic env: run properties via the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.geometry import (
     PROFILES, TPU_V5E, max_tile_dims, sifive_tile_dims, solve_block_geometry,

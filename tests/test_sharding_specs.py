@@ -1,10 +1,14 @@
 """Sharding policy unit tests (mesh-independent logic on a 1-device mesh
 plus spec-shape reasoning on synthetic meshes)."""
-import hypothesis.strategies as st
 import jax
 import numpy as np
-from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # hermetic env: run properties via the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.distributed import sharding as sh

@@ -4,12 +4,16 @@ import math
 import os
 import time
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # hermetic env: run properties via the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.conv import ConvSpec, conv2d_direct, conv_gemm_dims

@@ -1,7 +1,10 @@
 """MTE CSR (paper §III-B): bit-accurate encode/decode + tss grant semantics."""
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # hermetic env: run properties via the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 import pytest
-from hypothesis import given, settings
 
 from repro.core.tile_state import MAX_DIM, SEW, TailPolicy, TileState
 
