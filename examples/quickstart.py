@@ -53,7 +53,35 @@ print(f"\nfused-epilogue GEMM: pallas == reference ✓ "
       f"(max abs {float(jnp.max(jnp.abs(out_pallas - out_ref))):.2e})")
 
 # ---------------------------------------------------------------------------
-# 4. A model from the zoo, one forward pass.
+# 4. Data-format policies: the SEW field as an API.  The same GEMM runs
+#    fp32 / bf16 / int8-with-scales by naming a policy — quantization,
+#    accumulator width and the per-format cached plan are all derived.
+# ---------------------------------------------------------------------------
+from repro.core import FORMATS
+from repro.core import autotune
+
+tile_int8 = max_tile_dims(PROFILES["mte32s"], SEW.E8, SEW.E32)
+print(f"\nFormula 3 (int8→i32, B transposed):    max tile = {tile_int8.mnk}")
+for name in ("fp32", "bf16", "bf16acc", "int8"):
+    print(f"  {FORMATS[name].describe()}")
+
+out_fp32 = mte_gemm(a, b, c, bias, epilogue=epi, backend="pallas")
+hits0 = autotune.cache_stats().hits
+out_int8 = mte_gemm(a, b, c, bias, epilogue=epi, backend="pallas",
+                    format_policy="int8")
+out_int8_again = mte_gemm(a, b, c, bias, epilogue=epi, backend="pallas",
+                          format_policy="int8")
+# Same (shape, format) twice ⇒ the second call is a warm plan-cache hit.
+assert autotune.cache_stats().hits > hits0, "expected a warm plan-cache hit"
+np.testing.assert_array_equal(out_int8, out_int8_again)
+rel = float(jnp.max(jnp.abs(out_int8 - out_fp32))
+            / jnp.max(jnp.abs(out_fp32)))
+assert rel < 0.05, f"int8 route strayed {rel:.3f} from the fp32 oracle"
+print(f"int8 GEMM: warm cache hit on 2nd call ✓, "
+      f"max rel delta vs fp32 {rel:.4f} (per-channel scales)")
+
+# ---------------------------------------------------------------------------
+# 5. A model from the zoo, one forward pass.
 # ---------------------------------------------------------------------------
 from repro.configs import get_config
 from repro.models import model as M

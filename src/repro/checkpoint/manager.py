@@ -20,6 +20,12 @@ Properties:
   recovery on a smaller cluster "just works".
 - Data-pipeline state and step are stored in the manifest for exact-stream
   resume; retention keeps the newest ``keep`` checkpoints.
+- **GEMM plan persistence**: ``save``/``save_async`` accept the autotune
+  plan-cache snapshot (``training.trainer.plan_cache_snapshot``) and
+  store it in the manifest; ``restore`` hands it back (and
+  ``restore_plans`` feeds it straight into the process-global cache), so
+  a resumed training job starts with the measured (shape, format)-keyed
+  plans of its first life instead of re-solving them.
 """
 from __future__ import annotations
 
@@ -59,7 +65,8 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
 
     # -- save -----------------------------------------------------------------
-    def save(self, step: int, params, opt_state, extra: Optional[dict] = None):
+    def save(self, step: int, params, opt_state, extra: Optional[dict] = None,
+             gemm_plans: Optional[dict] = None):
         self.wait()
         tree = {"params": params, "opt_state": opt_state}
         flat = _flatten(tree)
@@ -69,19 +76,21 @@ class CheckpointManager:
             "step": step,
             "treedef": str(treedef),
             "extra": extra or {},
+            "gemm_plans": gemm_plans,
             "keys": sorted(host.keys()),
         }
         self._write(step, host, manifest)
 
     def save_async(self, step: int, params, opt_state,
-                   extra: Optional[dict] = None):
+                   extra: Optional[dict] = None,
+                   gemm_plans: Optional[dict] = None):
         """Snapshot synchronously (device→host), write in the background."""
         self.wait()
         tree = {"params": params, "opt_state": opt_state}
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         manifest = {"step": step, "extra": extra or {},
-                    "keys": sorted(host.keys())}
+                    "gemm_plans": gemm_plans, "keys": sorted(host.keys())}
         self._thread = threading.Thread(
             target=self._write, args=(step, host, manifest), daemon=True)
         self._thread.start()
@@ -120,6 +129,19 @@ class CheckpointManager:
             if d.startswith("step_") and not d.endswith(".tmp"):
                 out.append(int(d.split("_")[1]))
         return sorted(out)
+
+    def restore_plans(self, step: Optional[int] = None) -> int:
+        """Feed a checkpoint's GEMM plan snapshot into the global plan
+        cache (no-op when the checkpoint predates plan persistence or
+        was tuned on a different substrate).  Returns #plans restored."""
+        from repro.training.trainer import restore_plan_cache
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return 0
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            manifest = json.load(f)
+        return restore_plan_cache(manifest.get("gemm_plans"))
 
     def latest_step(self) -> Optional[int]:
         path = os.path.join(self.dir, "LATEST")

@@ -82,6 +82,13 @@ class ArchConfig:
     # execution knobs
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    format_policy: Optional[str] = None     # repro.core.formats policy name
+    #                                         (fp32|bf16|bf16acc|int8); None
+    #                                         infers from compute_dtype.  The
+    #                                         SEW contract: every projection /
+    #                                         expert GEMM runs under this
+    #                                         format and gets per-format
+    #                                         cached plans.
     gemm_policy: str = "mte"                # mte | amx | xla (dispatch policy)
     gemm_backend: str = "xla"               # xla | pallas
     remat: str = "full"                     # none | full | dots
@@ -98,6 +105,11 @@ class ArchConfig:
 
     def __post_init__(self):
         assert self.n_heads % self.n_kv_heads == 0
+        if self.format_policy is not None:
+            from repro.core.formats import FORMATS
+            assert self.format_policy in FORMATS, (
+                f"unknown format_policy {self.format_policy!r}; "
+                f"known: {sorted(FORMATS)}")
         for mixer, ffn in self.pattern:
             assert mixer in ("attn", "local", "rglru", "ssd"), mixer
             assert ffn in ("mlp", "moe", "none"), ffn
@@ -178,6 +190,10 @@ class ArchConfig:
             vocab=512,
             window=16 if self.window else None,
             compute_dtype="float32",
+            # Smoke tests validate numerics against f32 oracles, so the
+            # production format policy is dropped with the bf16 compute
+            # dtype; tests opt back in explicitly per case.
+            format_policy=None,
             remat="none",
         )
         if self.moe:

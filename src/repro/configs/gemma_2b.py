@@ -12,4 +12,7 @@ CONFIG = register(ArchConfig(
     pattern=(("attn", "mlp"),),
     mlp_type="geglu", norm_type="rmsnorm",
     rope_theta=10000.0, embed_scale=True, tied_embeddings=True,
+    # bf16 operands / f32 accumulation on every projection (Formula 3
+    # widening SEW pair) — the production mixed-precision default.
+    format_policy="bf16",
 ))

@@ -16,5 +16,9 @@ CONFIG = register(ArchConfig(
     # §Perf pair 1 measured 10.3× over the GSPMD scatter dispatch
     # (baseline roofline numbers were collected with moe_impl="scatter").
     moe_impl="a2a",
+    # int8-with-scales expert/projection GEMMs (E8 SEW): the small,
+    # skinny per-expert GEMMs (d_ff 512) are exactly where quantized
+    # formats beat rigid fp32 schedules hardest — serving default.
+    format_policy="int8",
     moe=MoEConfig(n_experts=32, top_k=8, d_ff_expert=512),
 ))

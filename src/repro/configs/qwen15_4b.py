@@ -12,4 +12,8 @@ CONFIG = register(ArchConfig(
     pattern=(("attn", "mlp"),),
     mlp_type="swiglu", norm_type="rmsnorm", qkv_bias=True,
     rope_theta=1000000.0,
+    # Narrow-accumulator fast path: bf16 operands AND bf16 accumulator
+    # (uniform E16 SEW pair) — trades accumulation precision for the
+    # smaller accumulator tile footprint.
+    format_policy="bf16acc",
 ))

@@ -4,6 +4,8 @@ Layout:
 - ``tile_state``  — the 64-bit MTE CSR, bit-accurate (paper §III-B).
 - ``geometry``    — Formula 2/3 tile solvers + TPU BlockSpec solver (§III-A).
 - ``epilogue``    — vector-processing-mode epilogues (§III-C4).
+- ``formats``     — data-format policies (the SEW contract): fp32 / bf16 /
+                    bf16acc / int8-with-scales, shared by every GEMM path.
 - ``dispatch``    — ``mte_gemm`` public entry point.
 - ``autotune``    — plan cache: per-signature candidate search (geometry
                     neighbours, transposed-B, split-K, grouped) + LRU
@@ -17,6 +19,9 @@ from repro.core.autotune import (
 )
 from repro.core.dispatch import GemmPlan, mte_gemm, plan_gemm
 from repro.core.epilogue import Epilogue
+from repro.core.formats import (
+    FORMATS, FormatPolicy, infer_format, resolve_format,
+)
 from repro.core.geometry import (
     PROFILES, TPU_V5E, BlockGeometry, HardwareProfile, TpuProfile,
     max_tile_dims, solve_block_geometry, solve_unroll,
@@ -25,6 +30,7 @@ from repro.core.tile_state import SEW, TailPolicy, TileState
 
 __all__ = [
     "GemmPlan", "mte_gemm", "plan_gemm", "Epilogue",
+    "FORMATS", "FormatPolicy", "infer_format", "resolve_format",
     "ExecutionPlan", "GemmSignature", "PlanCache", "get_plan", "plan_cache",
     "PROFILES", "TPU_V5E", "BlockGeometry", "HardwareProfile", "TpuProfile",
     "max_tile_dims", "solve_block_geometry", "solve_unroll",

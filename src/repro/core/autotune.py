@@ -4,12 +4,17 @@ The geometry solver (:mod:`repro.core.geometry`) answers "what block shape
 does Formula 2/3 grant for this GEMM?" analytically.  This module turns
 that single answer into a *search*: for every distinct GEMM signature
 
-    (M, N, K, dtype_in, dtype_out, epilogue, policy, backend[, group])
+    (M, N, K, dtype_in, dtype_out, fmt, epilogue, policy, backend[, group])
 
 it enumerates candidate execution plans, scores them with the performance
 model (:func:`repro.core.perfmodel.tpu_gemm_time`, occupancy-aware), and
 memoizes the winner so the solve cost is paid **once per shape**, not once
-per call.  The plan-cache request→grant flow:
+per call.  ``fmt`` names the :class:`repro.core.formats.FormatPolicy`
+(fp32 / bf16 / bf16acc / int8): the *same* (M, N, K) gets an independent
+search, score and cache entry per format, because the format changes both
+the candidate set (Formula-3 transposed-B exists only for widening
+formats; int8's E8 sublane is 32) and the score (narrower SEW ⇒ higher
+MXU rate, fewer HBM bytes).  The plan-cache request→grant flow:
 
 1. A caller (``dispatch.mte_gemm``, ``kernels/ops.py``, conv im2col, MoE
    experts, attention projections, the serving engine) builds a
@@ -64,7 +69,7 @@ __all__ = [
     "GemmSignature", "ExecutionPlan", "PlanCache", "CacheStats",
     "enumerate_candidates", "execute_plan", "get_plan", "plan_cache",
     "reset_cache", "configure", "cache_stats", "save_plans", "load_plans",
-    "benchmark_shape", "DEFAULT_N_CORES",
+    "benchmark_shape", "benchmark_format", "DEFAULT_N_CORES",
 ]
 
 # Planning horizon for grid occupancy: a v5e host slice exposes 8 cores
@@ -75,7 +80,9 @@ __all__ = [
 DEFAULT_N_CORES = 8
 
 _SPLIT_CANDIDATES = (2, 4, 8)
-_CACHE_VERSION = 1
+# v2: GemmSignature grew the `fmt` (FormatPolicy name) field — v1 files
+# cannot be keyed correctly and are rejected on load.
+_CACHE_VERSION = 2
 
 
 def _dtype_name(dt) -> str:
@@ -95,6 +102,10 @@ class GemmSignature:
 
     ``group`` > 1 marks a grouped (per-expert) GEMM whose per-group
     operand shapes are (m, k) × (k, n); plain GEMMs use group=1.
+    ``fmt`` names the :class:`repro.core.formats.FormatPolicy` the GEMM
+    runs under — distinct formats get distinct plans even when the raw
+    operand dtypes coincide (bf16 vs bf16acc differ only in accumulator
+    width).
     """
 
     m: int
@@ -106,16 +117,27 @@ class GemmSignature:
     policy: Policy = "mte"
     backend: str = "pallas"
     group: int = 1
+    fmt: str = "fp32"
 
     @classmethod
     def make(cls, m: int, n: int, k: int, dtype_in, dtype_out,
              epilogue: Optional[Epilogue] = None, policy: Policy = "mte",
-             backend: str = "pallas", group: int = 1) -> "GemmSignature":
+             backend: str = "pallas", group: int = 1,
+             fmt: Optional[str] = None) -> "GemmSignature":
+        if fmt is None:
+            from repro.core.formats import infer_format
+            fmt = infer_format(dtype_in).name
         return cls(m=int(m), n=int(n), k=int(k),
                    dtype_in=_dtype_name(dtype_in),
                    dtype_out=_dtype_name(dtype_out),
                    epilogue=epilogue or Epilogue(), policy=policy,
-                   backend=backend, group=int(group))
+                   backend=backend, group=int(group), fmt=str(fmt))
+
+    @property
+    def format_policy(self):
+        from repro.core.formats import FORMATS, infer_format
+        import jax.numpy as jnp
+        return FORMATS.get(self.fmt) or infer_format(jnp.dtype(self.dtype_in))
 
     @property
     def sew_i(self) -> SEW:
@@ -220,12 +242,11 @@ def enumerate_candidates(sig: GemmSignature,
     # cores — decode GEMVs, skinny projections.  Grouped signatures are
     # excluded: the grouped kernel has no split-K execution path, and its
     # group grid dimension already provides the parallelism.  Integer
-    # GEMMs are excluded: the split kernel's partials are f32.
-    import numpy as np
+    # GEMMs participate too: the split kernel accumulates partials in the
+    # format's accumulator dtype (int32 for int8), so the quantized
+    # decode GEMVs the format policy targets get the K-parallel route.
     grid_mn = cdiv(sig.m, base.bm) * cdiv(sig.n, base.bn)
-    integer_in = np.issubdtype(np.dtype(sig.dtype_in), np.integer)
-    if (sig.group == 1 and grid_mn < n_cores and sig.k > sub
-            and not integer_in):
+    if sig.group == 1 and grid_mn < n_cores and sig.k > sub:
         for s in _SPLIT_CANDIDATES:
             bk = _split_bk(base.bk, sig.k, s, sub)
             if cdiv(sig.k, bk) < s:
@@ -264,6 +285,13 @@ def execute_plan(plan: ExecutionPlan, a, b, c=None, bias=None, *,
     For route "mte" with a transposed-B geometry the caller passes row-major
     b; the transpose to the Formula 3 layout happens here (a BlockSpec
     index-map change inside the kernel, a cheap relayout outside).
+
+    The signature's format decides the accumulator dtype every route
+    carries (f32 / bf16 / int32) — quantized signatures receive
+    already-quantized int8 operands (the quantize/dequantize halves live
+    with the caller in ``kernels/ops.py`` / ``kernels/autodiff.py``).
+    The rigid route deliberately ignores the narrow-accumulator fast
+    path: a rigid ISA cannot adapt its accumulator width.
     """
     from repro.kernels import ops
     from repro.kernels.mte_gemm import mte_gemm_pallas
@@ -278,12 +306,15 @@ def execute_plan(plan: ExecutionPlan, a, b, c=None, bias=None, *,
     geom = plan.geometry
     import jax.numpy as jnp
     out_dtype = jnp.dtype(sig.dtype_out)
+    acc_dtype = sig.format_policy.accum_jnp
 
     if plan.route == "xla":
-        return _xla_gemm(a, b, c, bias, epilogue=epi, out_dtype=out_dtype)
+        return _xla_gemm(a, b, c, bias, epilogue=epi, out_dtype=out_dtype,
+                         acc_dtype=acc_dtype)
     if plan.route == "grouped":
         return grouped_gemm_pallas(a, b, geom=geom, epilogue=epi,
-                                   out_dtype=out_dtype, interpret=interpret)
+                                   out_dtype=out_dtype, acc_dtype=acc_dtype,
+                                   interpret=interpret)
     if plan.route == "rigid":
         return rigid_gemm_pallas(a, b, c=c, bias=bias, epilogue=epi,
                                  out_dtype=out_dtype, interpret=interpret)
@@ -291,16 +322,19 @@ def execute_plan(plan: ExecutionPlan, a, b, c=None, bias=None, *,
         return mte_gemm_splitk_pallas(a, b, c=c, bias=bias, geom=geom,
                                       n_split=geom.split_k, epilogue=epi,
                                       out_dtype=out_dtype,
+                                      acc_dtype=acc_dtype,
                                       interpret=interpret)
     bm = b.T if geom.transposed_b else b
     return mte_gemm_pallas(a, bm, c=c, bias=bias, geom=geom, epilogue=epi,
-                           out_dtype=out_dtype, interpret=interpret)
+                           out_dtype=out_dtype, acc_dtype=acc_dtype,
+                           interpret=interpret)
 
 
 _XLA_GEMM_JIT = None
 
 
-def _xla_gemm(a, b, c, bias, *, epilogue: Epilogue, out_dtype):
+def _xla_gemm(a, b, c, bias, *, epilogue: Epilogue, out_dtype,
+              acc_dtype=None):
     """The fused-dot route XLA schedules itself (jitted once per shape)."""
     import functools
     import jax
@@ -310,13 +344,15 @@ def _xla_gemm(a, b, c, bias, *, epilogue: Epilogue, out_dtype):
     if _XLA_GEMM_JIT is None:
         # One module-level jit so repeat calls hit the compile cache
         # instead of retracing through a fresh closure.
-        @functools.partial(jax.jit, static_argnames=("epi", "dt"))
-        def run(a_, b_, c_, bias_, epi, dt):
-            acc = jnp.dot(a_, b_, preferred_element_type=jnp.float32)
+        @functools.partial(jax.jit, static_argnames=("epi", "dt", "at"))
+        def run(a_, b_, c_, bias_, epi, dt, at):
+            acc = jnp.dot(a_, b_, preferred_element_type=at)
             return epi.apply(acc, c_in=c_, bias=bias_).astype(dt)
 
         _XLA_GEMM_JIT = run
-    return _XLA_GEMM_JIT(a, b, c, bias, epilogue, jnp.dtype(out_dtype))
+    acc_dtype = jnp.dtype(acc_dtype) if acc_dtype is not None else jnp.float32
+    return _XLA_GEMM_JIT(a, b, c, bias, epilogue, jnp.dtype(out_dtype),
+                         acc_dtype)
 
 
 def _operands_for(sig: GemmSignature, seed: int = 0):
@@ -598,12 +634,18 @@ def cache_stats() -> CacheStats:
 def get_plan(m: int, n: int, k: int, dtype_in, dtype_out=None, *,
              epilogue: Optional[Epilogue] = None, policy: Policy = "mte",
              backend: str = "pallas", group: int = 1,
+             fmt: Optional[str] = None,
              measure: bool = False,
              interpret: Optional[bool] = None) -> ExecutionPlan:
-    """The one-call planning entry point used by the dispatch layer."""
+    """The one-call planning entry point used by the dispatch layer.
+
+    ``fmt`` names the FormatPolicy (None infers it from ``dtype_in``);
+    it is part of the cache key, so the same shape planned under two
+    formats yields two independent plans.
+    """
     dtype_out = dtype_out if dtype_out is not None else dtype_in
     sig = GemmSignature.make(m, n, k, dtype_in, dtype_out, epilogue,
-                             policy, backend, group)
+                             policy, backend, group, fmt)
     return _GLOBAL.plan(sig, measure=measure, interpret=interpret)
 
 
@@ -653,3 +695,41 @@ def benchmark_shape(m: int, n: int, k: int, dtype_in="float32", *,
         "route": tuned.route,
         "plan": tuned.describe(),
     }
+
+
+def benchmark_format(m: int, n: int, k: int, fmt: str = "fp32", *,
+                     iters: int = 3, measure: bool = True,
+                     interpret: Optional[bool] = None) -> Dict[str, float]:
+    """Model + (optionally) measure one shape under one FormatPolicy.
+
+    The modeled time comes from the analytic score of the format's best
+    candidate — this is where the narrower-SEW throughput/traffic gains
+    show up regardless of substrate.  The measured time runs the tuned
+    winner on the current substrate (interpret mode on CPU has no native
+    int8 MMA, so CPU-measured int8 numbers reflect the interpreter, not
+    the TPU target; the modeled column is the paper-faithful comparison).
+    Measurement excludes the quantize/dequantize halves: weights are
+    quantized once offline in the serving scenario this models.
+    """
+    from repro.core.formats import FORMATS
+    fp = FORMATS[fmt]
+    sig = GemmSignature.make(m, n, k, fp.operand_dtype, fp.accum_dtype,
+                             fmt=fmt)
+    cache = PlanCache(profile=_GLOBAL.profile, n_cores=_GLOBAL.n_cores)
+    # Modeled = the analytic best over the format's candidate set — a
+    # substrate-independent number (measured refinement may route to a
+    # different winner on this substrate without changing it).
+    cands = enumerate_candidates(sig, cache.profile, cache.n_cores)
+    modeled = min(score_geometry(sig, g, cache.profile, cache.n_cores)
+                  for g in cands)
+    plan = cache.plan(sig, measure=measure, interpret=interpret)
+    out = {
+        "fmt": fmt,
+        "modeled_us": modeled * 1e6,
+        "route": plan.route,
+        "plan": plan.describe(),
+    }
+    if measure:
+        out["measured_us"] = measure_plan(plan, iters=iters,
+                                          interpret=interpret) * 1e6
+    return out

@@ -16,9 +16,9 @@ dispatch layer *grants* an execution plan and routes to a backend:
 
 **Plan-cache request→grant flow** (the ``tss`` handshake, memoized):
 every kernel-backed call builds a
-:class:`repro.core.autotune.GemmSignature` from its operands (in
-``kernels/ops.py`` / ``kernels/autodiff.py``) and asks the
-process-global plan cache for an
+:class:`repro.core.autotune.GemmSignature` from its operands **and its
+format policy** (in ``kernels/ops.py`` / ``kernels/autodiff.py``) and
+asks the process-global plan cache for an
 :class:`~repro.core.autotune.ExecutionPlan`.  The first request for a
 signature enumerates candidate plans — MTE block-geometry neighbours
 around the analytic ``solve_block_geometry`` point, the transposed-B
@@ -31,6 +31,20 @@ the MTE block schedule, split-K, the rigid baseline, or (after measured
 refinement) the fused XLA dot.  The XLA/reference backends execute a
 single fused dot regardless, so they skip planning entirely — XLA
 schedules its own tiling.
+
+**The format dimension** (``format_policy=``): callers may name a
+:class:`repro.core.formats.FormatPolicy` — ``"fp32"``, ``"bf16"``,
+``"bf16acc"`` (bf16 accumulator fast path) or ``"int8"`` (quantize →
+integer-dot → dequantize epilogue, symmetric per-channel scales).  The
+policy is the SEW field of the paper's CSR made into an API contract:
+it sets the operand cast / quantization *once* here instead of ad-hoc
+``astype`` at every call site, becomes part of the GemmSignature (so
+each format gets its own searched-and-cached plan: the E8 sublane is
+32, Formula 3's widening layout exists only when SEW_i < SEW_o, and
+``tpu_gemm_time`` credits the narrower SEW with a higher MXU rate and
+fewer HBM bytes), and decides the accumulator dtype every kernel route
+carries.  ``format_policy=None`` infers the policy from the operand
+dtype, which reproduces the pre-format behaviour exactly.
 
 **Adding a new candidate kernel route**: see the module docstring of
 :mod:`repro.core.autotune` — emit the candidate geometry there, name the
@@ -77,7 +91,15 @@ class GemmPlan:
 
 def plan_gemm(m: int, n: int, k: int, dtype_in=jnp.float32,
               dtype_out=None, policy: Policy = "mte",
-              profile: TpuProfile = TPU_V5E, n_cores: int = 1) -> GemmPlan:
+              profile: TpuProfile = TPU_V5E, n_cores: int = 1,
+              format_policy=None) -> GemmPlan:
+    """Analytic plan + modeled timing (no execution).  A ``format_policy``
+    overrides the dtype pair with the policy's operand/accumulator widths
+    — the SEW sweep entry point for benchmarks."""
+    if format_policy is not None:
+        from repro.core.formats import resolve_format
+        fmt = resolve_format(format_policy)
+        dtype_in, dtype_out = fmt.operand_jnp, fmt.accum_jnp
     dtype_out = dtype_out or dtype_in
     sew_i = SEW.from_dtype(dtype_in)
     sew_o = SEW.from_dtype(dtype_out)
@@ -92,39 +114,52 @@ def mte_gemm(a, b, c=None, bias=None, *,
              policy: Policy = "mte",
              backend: str = _DEFAULT_BACKEND,
              out_dtype=None,
+             format_policy=None,
              interpret: bool = True):
     """Compute ``epilogue(a @ b [, c, bias])`` with a plan-cached schedule.
 
     a: (M, K); b: (K, N); optional c: (M, N) when ``epilogue.beta != 0``;
     optional bias: (N,) or (M,) per ``epilogue.bias_axis``.
-    Accumulation is always f32 (``SEW_o``), output cast to ``out_dtype``
-    (defaults to f32 for mixed precision, input dtype otherwise).
+    ``format_policy`` (name, FormatPolicy, or None ⇒ inferred from
+    ``a.dtype``) sets the operand/accumulator element widths: operands
+    are cast (or int8-quantized with per-channel scales) here, the
+    accumulator runs at the policy's ``SEW_o``, and the output is cast
+    to ``out_dtype`` (defaults to f32 for narrowing/quantized formats,
+    input dtype otherwise).
     """
+    from repro.core import formats
     epilogue = epilogue or Epilogue()
+    fmt = formats.resolve_format(format_policy, a.dtype)
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
         raise ValueError(f"GEMM contraction mismatch: {a.shape} @ {b.shape}")
     if out_dtype is None:
-        out_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.int8) else a.dtype
+        out_dtype = (jnp.float32
+                     if (fmt.quantized or fmt.operand_jnp
+                         in (jnp.bfloat16, jnp.int8))
+                     else jnp.dtype(a.dtype))
 
     # Request→grant happens where the grant changes which kernel
     # launches: the pallas path consults the plan cache in
-    # kernels/ops.py + kernels/autodiff.py (one plan per signature;
-    # repeat calls are cache hits).  The XLA/reference paths execute a
-    # single fused dot regardless, so no plan is solved for them.
+    # kernels/ops.py + kernels/autodiff.py (one plan per (signature,
+    # format); repeat calls are cache hits).  The XLA/reference paths
+    # execute a single fused dot regardless, so no plan is solved for
+    # them — but they honor the same format policy so all three
+    # backends agree numerically.
     if backend == "pallas":
         from repro.kernels import ops
         return ops.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
                             policy=policy, out_dtype=out_dtype,
-                            interpret=interpret)
+                            format_policy=fmt, interpret=interpret)
     if backend == "reference":
         from repro.kernels import ref
         return ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
-                            out_dtype=out_dtype)
-    # XLA path: one dot with f32 accumulation + jnp epilogue; XLA fuses the
-    # epilogue into the GEMM consumer on TPU, matching MTE's in-register
-    # vector-mode post-ops.
-    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
-    out = epilogue.apply(acc, c_in=c, bias=bias)
+                            out_dtype=out_dtype, format_policy=fmt)
+    # XLA path: one dot at the policy's accumulator width + jnp epilogue;
+    # XLA fuses the epilogue into the GEMM consumer on TPU, matching
+    # MTE's in-register vector-mode post-ops.
+    acc = formats.xla_gemm(a, b, fmt)
+    out = epilogue.apply(acc.astype(jnp.float32)
+                         if fmt.quantized else acc, c_in=c, bias=bias)
     return out.astype(out_dtype)

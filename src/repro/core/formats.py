@@ -1,0 +1,233 @@
+"""First-class data-format policy — the SEW field as a framework contract.
+
+The paper's central flexibility claim is that MTE adapts to the
+application's *data format* through the SEW fields of its CSR (§III-B):
+the same ``tfmul`` instruction computes fp32, bf16→f32 widening, or int8
+→int32 widening GEMMs, and the tile geometry granted by Formulas 2/3
+*changes with the element width* (narrower SEW ⇒ wider K tiles, col-major
+B).  This module makes that dimension explicit for the whole framework: a
+:class:`FormatPolicy` names the operand element type (``SEW_i``), the
+accumulator type (``SEW_o``), and — for the quantized formats — how the
+float operands are mapped onto the integer grid (symmetric per-channel
+scales) and back (the dequantize epilogue).
+
+Every layer of the stack consumes the policy instead of scattering
+``astype`` calls:
+
+- ``dispatch.mte_gemm(format_policy=...)`` and ``kernels/ops.py`` cast or
+  quantize operands once, here;
+- the autotune plan cache keys plans on the policy name
+  (``GemmSignature.fmt``), so fp32/bf16/bf16acc/int8 versions of one shape
+  get separately searched, scored (``perfmodel.tpu_gemm_time`` models the
+  narrower-SEW throughput/traffic gain) and cached plans;
+- ``models/layers.py`` / ``models/moe.py`` derive the policy from
+  ``cfg.format_policy`` (falling back to ``cfg.compute_dtype``), so a
+  model switches precision by flipping one config field;
+- ``serving/engine.py`` selects a policy per request and warm-starts the
+  plan cache with format-keyed plans.
+
+Built-in policies
+-----------------
+
+========  ==========  ===========  =======================================
+name      operands    accumulator  notes
+========  ==========  ===========  =======================================
+fp32      float32     float32      the uniform-precision baseline
+bf16      bfloat16    float32      Formula-3 widening (SEW_i < SEW_o)
+bf16acc   bfloat16    bfloat16     fast path: narrow accumulator (E16)
+int8      int8        int32        quantize → integer-dot → dequantize
+========  ==========  ===========  =======================================
+
+Quantization contract (``int8``): symmetric per-channel scales over the
+contraction axis — A rows carry ``scale_a`` (M,1), B columns ``scale_b``
+(1,N) — so ``A@B ≈ dequantize(Aq @ Bq) = (Aq@Bq)·scale_a·scale_b`` with a
+relative error of roughly ``1/127`` per operand.  Operands that are
+*already* integer skip scaling entirely (native int8 workloads stay
+bit-exact).  Gradients use the straight-through estimator: the backward
+GEMMs run on the full-precision residuals (``kernels/autodiff.py``), so
+``jax.grad`` through a quantized projection equals the fp32 gradient.
+The LM head (``layers.unembed``) deliberately stays at ≥ bf16 — logits
+are not quantized, matching standard quantized-serving practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core.tile_state import SEW
+
+__all__ = [
+    "FormatPolicy", "FORMATS", "FP32", "BF16", "BF16_ACCUM", "INT8",
+    "resolve_format", "infer_format", "quantize", "dequantize",
+    "quantize_operands", "xla_gemm", "xla_grouped",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatPolicy:
+    """One named data format: operand/accumulator dtypes + SEW mapping.
+
+    ``operand_dtype`` is what A/B are cast (or quantized) to before the
+    MMA — the paper's ``SEW_i``.  ``accum_dtype`` is the accumulator tile
+    element type — ``SEW_o``.  ``quantized`` selects the int8-with-scales
+    route (quantize → integer-dot → dequantize epilogue);
+    ``per_channel`` picks per-row/column scales (default) over a single
+    per-tensor scale.
+    """
+
+    name: str
+    operand_dtype: str
+    accum_dtype: str
+    quantized: bool = False
+    per_channel: bool = True
+
+    @property
+    def operand_jnp(self):
+        return jnp.dtype(self.operand_dtype)
+
+    @property
+    def accum_jnp(self):
+        return jnp.dtype(self.accum_dtype)
+
+    @property
+    def sew_i(self) -> SEW:
+        return SEW.from_dtype(self.operand_dtype)
+
+    @property
+    def sew_o(self) -> SEW:
+        return SEW.from_dtype(self.accum_dtype)
+
+    def describe(self) -> str:
+        tail = " quantized" if self.quantized else ""
+        return (f"{self.name}[{self.operand_dtype}->{self.accum_dtype} "
+                f"SEW {self.sew_i.name}->{self.sew_o.name}{tail}]")
+
+
+FP32 = FormatPolicy("fp32", "float32", "float32")
+BF16 = FormatPolicy("bf16", "bfloat16", "float32")
+BF16_ACCUM = FormatPolicy("bf16acc", "bfloat16", "bfloat16")
+INT8 = FormatPolicy("int8", "int8", "int32", quantized=True)
+
+FORMATS: Dict[str, FormatPolicy] = {
+    p.name: p for p in (FP32, BF16, BF16_ACCUM, INT8)
+}
+
+
+def infer_format(dtype) -> FormatPolicy:
+    """The policy an un-annotated operand dtype has always implied."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.integer):
+        return INT8
+    if dt == jnp.bfloat16:
+        return BF16
+    return FP32
+
+
+def resolve_format(fmt: Union[None, str, FormatPolicy],
+                   dtype=None) -> FormatPolicy:
+    """Resolve a policy from a name, an instance, or (None) a dtype."""
+    if fmt is None:
+        return infer_format(dtype if dtype is not None else jnp.float32)
+    if isinstance(fmt, FormatPolicy):
+        return fmt
+    name = str(fmt)
+    if name not in FORMATS:
+        raise ValueError(f"unknown format policy {name!r}; "
+                         f"known: {sorted(FORMATS)}")
+    return FORMATS[name]
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization (symmetric, per-channel over the contraction axis)
+# ---------------------------------------------------------------------------
+
+
+def quantize(x, *, contract_axis: int, per_channel: bool = True
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Symmetric int8 quantization with scales over ``contract_axis``.
+
+    Returns ``(q, scale)`` with keepdims scales so ``q * scale``
+    broadcasts back.  Integer inputs pass through *unchanged* and
+    unscaled (``scale=None``) — native int8 GEMMs stay bit-exact, and
+    wider integer operands (int16/int32) keep their width rather than
+    being wrapped mod 256 (their dot accumulates in int32 exactly as
+    before the format layer existed).
+    """
+    if jnp.issubdtype(jnp.dtype(x.dtype), jnp.integer):
+        return x, None
+    xf = x.astype(jnp.float32)
+    axes = (contract_axis,) if per_channel else tuple(range(x.ndim))
+    scale = jnp.max(jnp.abs(xf), axis=axes, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(acc, scale_a: Optional[jnp.ndarray],
+               scale_b: Optional[jnp.ndarray]):
+    """Map an integer accumulator back to f32: ``acc · s_a · s_b``.
+
+    With both scales None (native integer operands) the accumulator is
+    returned untouched, still integer.
+    """
+    if scale_a is None and scale_b is None:
+        return acc
+    out = acc.astype(jnp.float32)
+    if scale_a is not None:
+        out = out * scale_a
+    if scale_b is not None:
+        out = out * scale_b
+    return out
+
+
+def quantize_operands(a, b, fmt: FormatPolicy = INT8):
+    """Quantize a 2-D GEMM pair: A per-row, B per-column scales.
+
+    a: (M, K) → scales (M, 1); b: (K, N) → scales (1, N).  For grouped
+    3-D operands x: (G, C, K) / w: (G, K, N) the scales are (G, C, 1) and
+    (G, 1, N) — the contraction axis is always the last of ``a`` and the
+    second-to-last of ``b``.
+    """
+    aq, sa = quantize(a, contract_axis=a.ndim - 1,
+                      per_channel=fmt.per_channel)
+    bq, sb = quantize(b, contract_axis=b.ndim - 2,
+                      per_channel=fmt.per_channel)
+    # keepdims scales are already broadcast-ready against the (…, M, N)
+    # accumulator: sa is (…, M, 1), sb is (…, 1, N).
+    return aq, bq, sa, sb
+
+
+# ---------------------------------------------------------------------------
+# Plain-jnp format-aware GEMMs (the XLA / pjit-graph path and the oracle)
+# ---------------------------------------------------------------------------
+
+
+def xla_gemm(a, b, fmt: FormatPolicy):
+    """2-D ``a @ b`` under the policy, in plain jnp (GSPMD-shardable).
+
+    Returns the accumulator — f32 for the dequantized int8 route,
+    ``fmt.accum_dtype`` otherwise — so the caller applies its epilogue at
+    accumulator precision and casts last, exactly like the kernels.
+    """
+    if fmt.quantized:
+        aq, bq, sa, sb = quantize_operands(a, b, fmt)
+        acc = jnp.dot(aq, bq, preferred_element_type=jnp.int32)
+        return dequantize(acc, sa, sb)
+    ac = a.astype(fmt.operand_jnp)
+    bc = b.astype(fmt.operand_jnp)
+    return jnp.dot(ac, bc, preferred_element_type=fmt.accum_jnp)
+
+
+def xla_grouped(x, w, fmt: FormatPolicy):
+    """Grouped ``(G,C,K) @ (G,K,N)`` under the policy, in plain jnp."""
+    if fmt.quantized:
+        xq, wq, sx, sw = quantize_operands(x, w, fmt)
+        acc = jnp.einsum("gck,gkn->gcn", xq, wq,
+                         preferred_element_type=jnp.int32)
+        return dequantize(acc, sx, sw)
+    xc = x.astype(fmt.operand_jnp)
+    wc = w.astype(fmt.operand_jnp)
+    return jnp.einsum("gck,gkn->gcn", xc, wc,
+                      preferred_element_type=fmt.accum_jnp)

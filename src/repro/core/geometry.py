@@ -324,6 +324,7 @@ class TpuProfile:
     mxu: Tuple[int, int] = (128, 128)
     peak_bf16_flops: float = 197e12           # per chip
     peak_fp32_flops: float = 98.5e12
+    peak_int8_ops: float = 394e12             # E8 operands: 2x the bf16 rate
     hbm_bw_bytes_per_s: float = 819e9
     ici_bw_bytes_per_s: float = 50e9          # per link
     hbm_bytes: int = 16 * 1024 * 1024 * 1024
@@ -336,6 +337,10 @@ class TpuProfile:
         return (self.sublane(sew), self.lane)
 
     def peak_flops(self, sew_i: SEW) -> float:
+        """Peak MXU rate by input SEW — the narrower-SEW throughput gain
+        the format policy buys (E8 int ops run at 2x the E16 rate)."""
+        if sew_i.bits <= 8:
+            return self.peak_int8_ops
         return self.peak_bf16_flops if sew_i.bits <= 16 else self.peak_fp32_flops
 
 

@@ -21,7 +21,7 @@ the paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 from repro.core.geometry import (
     HardwareProfile, PROFILES, RegisterTile, UnrollPlan, cdiv, max_tile_dims,
@@ -29,7 +29,8 @@ from repro.core.geometry import (
 )
 from repro.core.tile_state import SEW
 
-__all__ = ["InstructionCounts", "count_instructions", "count_all"]
+__all__ = ["InstructionCounts", "count_instructions", "count_all",
+           "count_sew_sweep"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,3 +153,23 @@ def count_all(m: int, n: int, k: int, sew_i: SEW = SEW.E32,
               sew_o: SEW = SEW.E32) -> Dict[str, InstructionCounts]:
     return {a: count_instructions(a, m, n, k, sew_i, sew_o)
             for a in PROFILES}
+
+
+def count_sew_sweep(m: int, n: int, k: int,
+                    sews: Tuple[SEW, ...] = (SEW.E8, SEW.E16, SEW.E32),
+                    sew_o: SEW = SEW.E32,
+                    ) -> Dict[str, Dict[str, InstructionCounts]]:
+    """Instruction counts across input element widths (Table IX, extended).
+
+    The sweep now reaches down to E8 so the quantized int8 GEMMs the
+    format policy enables are covered: a narrower ``SEW_i`` widens the
+    Formula 3 K tile (``RLEN/SEW_i``), so MTE retires *fewer* MMAs and
+    tile loads for the same logical GEMM — the ISA-level mechanism behind
+    the int8 speedup.  ``sew_o`` is clamped up to ``sew_i`` for the
+    uniform-precision case (E32 inputs accumulate in E32).
+    """
+    out: Dict[str, Dict[str, InstructionCounts]] = {}
+    for sew in sews:
+        so = sew_o if sew_o.bits >= sew.bits else sew
+        out[sew.name] = count_all(m, n, k, sew, so)
+    return out

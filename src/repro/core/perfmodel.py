@@ -243,6 +243,13 @@ def tpu_gemm_time(geom: BlockGeometry, m: int, n: int, k: int,
     N-block column, B tiles once per M-block row, C written once (plus read
     when beta != 0 handled by caller).
 
+    The geometry's SEW pair makes this model **format-aware**: narrower
+    operand SEWs raise the attainable MXU rate (E8 int ops run at 2x the
+    E16 rate, ``TpuProfile.peak_flops``) *and* shrink the A/B HBM bytes
+    by ``sew_i.bytes`` — so the same (M, N, K) scores differently per
+    :class:`repro.core.formats.FormatPolicy`, which is what lets the plan
+    cache rank int8 above fp32 on the decode shapes.
+
     ``n_cores`` models grid occupancy across a multi-core slice: the
     parallel work units of a schedule are the ``gm·gn·split_k`` independent
     output (or partial) tiles — the K loop within one tile is a sequential

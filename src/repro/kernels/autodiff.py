@@ -15,6 +15,14 @@ stack.  The epilogue derivative is obtained with ``jax.vjp`` over
 ``Epilogue.apply`` — exact for every activation/softcap combination, no
 hand-written derivatives to get wrong.
 
+Data formats (:mod:`repro.core.formats`): the forward runs the format's
+arithmetic — bf16 / bf16acc operand casts, or int8 quantize →
+integer-dot → dequantize — while the backward always runs on the
+**full-precision residuals** (the original operands as the caller held
+them).  For the quantized formats this is the straight-through
+estimator: ``jax.grad`` through an int8 projection equals the fp32
+gradient exactly, because round/clip are treated as identity.
+
 flash_attention's backward recomputes through the XLA chunked-attention
 formulation (numerically the same math); a dedicated Pallas backward
 kernel is the natural next optimization on real hardware.
@@ -32,11 +40,12 @@ from repro.core.epilogue import Epilogue
 __all__ = ["mte_gemm_ad", "grouped_gemm_ad", "flash_attention_ad"]
 
 
-def _plan(m, n, k, dt_in, dt_out, policy, epilogue=None, group=1):
+def _plan(m, n, k, dt_in, dt_out, policy, epilogue=None, group=1, fmt=None):
     """Fetch (or solve+memoize) the execution plan from the global cache."""
     from repro.core import autotune
     return autotune.get_plan(m, n, k, dt_in, dt_out, epilogue=epilogue,
-                             policy=policy, backend="pallas", group=group)
+                             policy=policy, backend="pallas", group=group,
+                             fmt=fmt)
 
 
 def _run_plan(plan, a, b, c, bias, interpret):
@@ -62,32 +71,60 @@ def _raw_gemm(a, b, policy, interpret, out_dtype=jnp.float32):
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(4, 5, 6, 7, 8, 9))
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
 def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
-                out_dtype, interpret: bool, has_c: bool, has_bias: bool):
+                out_dtype, interpret: bool, has_c: bool, has_bias: bool,
+                fmt: str = "fp32"):
     """Differentiable fused GEMM routed through the autotune plan cache.
     c/bias are zero-size placeholders when unused (custom_vjp needs a
-    static pytree structure)."""
+    static pytree structure).  ``fmt`` names the FormatPolicy the forward
+    executes under (the backward ignores it — see module docstring)."""
+    from repro.core.formats import FORMATS, dequantize, quantize_operands
+    fp = FORMATS[fmt]
     m, k = a.shape
     n = b.shape[1]
-    plan = _plan(m, n, k, a.dtype, out_dtype, policy, epilogue=epilogue)
-    return _run_plan(plan, a, b,
+    if fp.quantized:
+        # quantize → integer-dot (plan-cached per format) → dequantize;
+        # the caller's epilogue applies at the dequantized f32
+        # accumulator, outside the kernel.  The inner plan carries the
+        # identity epilogue so every outer epilogue shares one plan.
+        aq, bq, sa, sb = quantize_operands(a, b, fp)
+        plan = _plan(m, n, k, aq.dtype, jnp.int32, policy,
+                     epilogue=Epilogue(), fmt=fmt)
+        acc = _run_plan(plan, aq, bq, None, None, interpret)
+        acc = dequantize(acc, sa, sb)
+        out = epilogue.apply(acc.astype(jnp.float32),
+                             c_in=c if has_c else None,
+                             bias=bias if has_bias else None)
+        return out.astype(out_dtype)
+    ac = a.astype(fp.operand_jnp)
+    bc = b.astype(fp.operand_jnp)
+    plan = _plan(m, n, k, ac.dtype, out_dtype, policy, epilogue=epilogue,
+                 fmt=fmt)
+    return _run_plan(plan, ac, bc,
                      c if has_c else None,
                      bias if has_bias else None, interpret)
 
 
 def _gemm_fwd(a, b, c, bias, epilogue, policy, out_dtype, interpret,
-              has_c, has_bias):
+              has_c, has_bias, fmt):
     out = mte_gemm_ad(a, b, c, bias, epilogue, policy, out_dtype,
-                      interpret, has_c, has_bias)
+                      interpret, has_c, has_bias, fmt)
     return out, (a, b, c, bias)
 
 
 def _gemm_bwd(epilogue, policy, out_dtype, interpret, has_c, has_bias,
-              res, g):
+              fmt, res, g):
+    # `fmt` is deliberately unused: the backward runs on the
+    # full-precision residuals (straight-through estimator).  Residuals
+    # may hold mixed dtypes (bf16 activations x f32 params) since the
+    # format policy now owns the operand casts, so the backward GEMMs run
+    # in the promoted common dtype.
     a, b, c, bias = res
+    ct = jnp.result_type(a.dtype, b.dtype)
+    af, bf = a.astype(ct), b.astype(ct)
     # Recompute the accumulator with the kernel (flash-style remat).
-    acc = _raw_gemm(a, b, policy, interpret)
+    acc = _raw_gemm(af, bf, policy, interpret)
 
     def epi(acc_, c_, bias_):
         return epilogue.apply(acc_, c_in=c_ if has_c else None,
@@ -96,10 +133,10 @@ def _gemm_bwd(epilogue, policy, out_dtype, interpret, has_c, has_bias,
 
     _, epi_vjp = jax.vjp(epi, acc, c, bias)
     dacc, dc, dbias = epi_vjp(g)
-    dacc = dacc.astype(a.dtype)
+    dacc = dacc.astype(ct)
     # The backward GEMMs run through the same MTE kernel.
-    da = _raw_gemm(dacc, b.T, policy, interpret).astype(a.dtype)
-    db = _raw_gemm(a.T, dacc, policy, interpret).astype(b.dtype)
+    da = _raw_gemm(dacc, bf.T, policy, interpret).astype(a.dtype)
+    db = _raw_gemm(af.T, dacc, policy, interpret).astype(b.dtype)
     return (da, db,
             dc.astype(c.dtype) if has_c else jnp.zeros_like(c),
             dbias.astype(bias.dtype) if has_bias else jnp.zeros_like(bias))
@@ -111,24 +148,45 @@ mte_gemm_ad.defvjp(_gemm_fwd, _gemm_bwd)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool,
+                    fmt: str = "fp32"):
+    from repro.core.formats import FORMATS, dequantize, quantize_operands
     from repro.kernels.grouped_gemm import grouped_gemm_pallas
+    fp = FORMATS[fmt]
     g, cap, k = x.shape
     n = w.shape[2]
-    plan = _plan(cap, n, k, x.dtype, out_dtype, "mte", epilogue=epilogue,
-                 group=g)
-    return grouped_gemm_pallas(x, w, geom=plan.geometry, epilogue=epilogue,
-                               out_dtype=out_dtype, interpret=interpret)
+    if fp.quantized:
+        xq, wq, sx, sw = quantize_operands(x, w, fp)
+        plan = _plan(cap, n, k, xq.dtype, jnp.int32, "mte",
+                     epilogue=Epilogue(), group=g, fmt=fmt)
+        acc = grouped_gemm_pallas(xq, wq, geom=plan.geometry,
+                                  epilogue=Epilogue(),
+                                  out_dtype=jnp.int32,
+                                  acc_dtype=jnp.int32, interpret=interpret)
+        acc = dequantize(acc, sx, sw)
+        out = epilogue.apply(acc.astype(jnp.float32))
+        return out.astype(out_dtype)
+    xc = x.astype(fp.operand_jnp)
+    wc = w.astype(fp.operand_jnp)
+    plan = _plan(cap, n, k, xc.dtype, out_dtype, "mte", epilogue=epilogue,
+                 group=g, fmt=fmt)
+    return grouped_gemm_pallas(xc, wc, geom=plan.geometry, epilogue=epilogue,
+                               out_dtype=out_dtype,
+                               acc_dtype=fp.accum_jnp, interpret=interpret)
 
 
-def _grouped_fwd(x, w, epilogue, out_dtype, interpret):
-    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret), (x, w)
+def _grouped_fwd(x, w, epilogue, out_dtype, interpret, fmt):
+    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt), (x, w)
 
 
-def _grouped_bwd(epilogue, out_dtype, interpret, res, g):
+def _grouped_bwd(epilogue, out_dtype, interpret, fmt, res, g):
+    # STE: full-precision backward regardless of the forward format;
+    # mixed-dtype residuals run in the promoted common dtype.
     from repro.kernels.grouped_gemm import grouped_gemm_pallas
-    x, w = res
+    x_in, w_in = res
+    ct = jnp.result_type(x_in.dtype, w_in.dtype)
+    x, w = x_in.astype(ct), w_in.astype(ct)
     gg, cap, k = x.shape
     n = w.shape[2]
     geom = _plan(cap, n, k, x.dtype, jnp.float32, "mte", group=gg).geometry
@@ -142,13 +200,13 @@ def _grouped_bwd(epilogue, out_dtype, interpret, res, g):
                     group=gg).geometry
     dx = grouped_gemm_pallas(dacc, wt, geom=geom_dx, epilogue=Epilogue(),
                              out_dtype=jnp.float32,
-                             interpret=interpret).astype(x.dtype)
+                             interpret=interpret).astype(x_in.dtype)
     xt = jnp.swapaxes(x, 1, 2)
     geom_dw = _plan(k, n, cap, xt.dtype, jnp.float32, "mte",
                     group=gg).geometry
     dw = grouped_gemm_pallas(xt, dacc, geom=geom_dw, epilogue=Epilogue(),
                              out_dtype=jnp.float32,
-                             interpret=interpret).astype(w.dtype)
+                             interpret=interpret).astype(w_in.dtype)
     return dx, dw
 
 

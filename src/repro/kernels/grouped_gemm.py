@@ -47,7 +47,7 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, k: int, bk: int,
         w = jnp.where(kw, w, jnp.zeros_like(w))
     acc_ref[...] += jax.lax.dot_general(
         a, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(ki == nk - 1)
     def _epi():
@@ -55,10 +55,18 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, k: int, bk: int,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("geom", "epilogue", "out_dtype", "interpret"))
+    jax.jit, static_argnames=("geom", "epilogue", "out_dtype", "acc_dtype",
+                              "interpret"))
 def grouped_gemm_pallas(x, w, *, geom: BlockGeometry,
                         epilogue: Epilogue = Epilogue(),
-                        out_dtype=jnp.float32, interpret: bool = True):
+                        out_dtype=jnp.float32, acc_dtype=None,
+                        interpret: bool = True):
+    """Per-expert GEMM with the accumulator at the format policy's
+    ``SEW_o`` (f32 by default, int32 for int8 operands, bf16 for the
+    narrow-accumulator fast path)."""
+    acc_dtype = (jnp.dtype(acc_dtype) if acc_dtype is not None
+                 else (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
+                       else jnp.float32))
     g, cap, k = x.shape
     gw, kw, n = w.shape
     if gw != g or kw != k:
@@ -79,6 +87,6 @@ def grouped_gemm_pallas(x, w, *, geom: BlockGeometry,
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, ki: (gi, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, cap, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(x, w)

@@ -109,16 +109,21 @@ def _clip_block(block: int, dim: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("geom", "epilogue", "out_dtype", "interpret"))
+    static_argnames=("geom", "epilogue", "out_dtype", "acc_dtype",
+                     "interpret"))
 def mte_gemm_pallas(a, b, c=None, bias=None, *, geom: BlockGeometry,
                     epilogue: Epilogue = Epilogue(),
-                    out_dtype=jnp.float32, interpret: bool = True):
+                    out_dtype=jnp.float32, acc_dtype=None,
+                    interpret: bool = True):
     """``epilogue(a @ b [, c, bias])`` with an MTE-solved block schedule.
 
     a: (M, K); b: (K, N), or (N, K) when ``geom.transposed_b`` (Formula 3
     col-major B).  bias: (N,) row bias.  Output: (M, N) in ``out_dtype``;
-    accumulation is always f32/int32 (``SEW_o``).
+    accumulation runs at ``acc_dtype`` — the format policy's ``SEW_o``
+    (f32/int32 by default, bf16 for the narrow-accumulator fast path).
     """
+    acc_dtype = jnp.dtype(acc_dtype) if acc_dtype is not None \
+        else _acc_dtype(a.dtype)
     m, k = a.shape
     n, kb = (b.shape if geom.transposed_b else b.shape[::-1])
     if kb != k:
@@ -159,6 +164,6 @@ def mte_gemm_pallas(a, b, c=None, bias=None, *, geom: BlockGeometry,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(a.dtype))],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(*operands)

@@ -1,13 +1,17 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 Each wrapper requests an execution plan from the autotune plan cache
-(:mod:`repro.core.autotune`) for the incoming shapes/dtypes — the ``tss``
-request→grant handshake, now memoized and candidate-searched — and
-invokes the granted route's ``pallas_call``: the MTE block-scheduled
-kernel, the split-K kernel for shapes whose (M, N) grid underfills the
-machine, or the rigid baseline.  ``interpret`` defaults to True off-TPU
-so the same entry points run under CPU tests and compile to Mosaic on
-real hardware.
+(:mod:`repro.core.autotune`) for the incoming shapes/dtypes **and format
+policy** — the ``tss`` request→grant handshake, now memoized and
+candidate-searched per format — and invokes the granted route's
+``pallas_call``: the MTE block-scheduled kernel, the split-K kernel for
+shapes whose (M, N) grid underfills the machine, or the rigid baseline.
+``format_policy`` (see :mod:`repro.core.formats`) selects the operand /
+accumulator element widths: operands are cast (bf16 / bf16acc) or
+symmetric-per-channel quantized (int8 → integer dot → dequantize
+epilogue) here, once, instead of at every call site.  ``interpret``
+defaults to True off-TPU so the same entry points run under CPU tests
+and compile to Mosaic on real hardware.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.epilogue import Epilogue
+from repro.core import formats as formats_lib
 from repro.kernels.rigid_gemm import rigid_gemm_pallas
 
 __all__ = ["mte_gemm", "grouped_gemm", "flash_attention",
@@ -33,17 +38,34 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
 
 def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
              policy: str = "mte", out_dtype=jnp.float32,
-             interpret: Optional[bool] = None):
+             format_policy=None, interpret: Optional[bool] = None):
     """Geometry-agnostic GEMM through the autotune plan cache.
 
     ``policy='amx'`` routes to the rigid baseline; tall/skinny shapes
     whose planned geometry carries ``split_k > 1`` route to the split-K
-    kernel.  Differentiable: backward runs as two more plan-cached MTE
-    GEMMs plus the epilogue's jnp vjp (kernels/autodiff.py)."""
+    kernel.  ``format_policy`` sets the data format (fp32 / bf16 /
+    bf16acc / int8-with-scales; None infers from ``a.dtype``).
+    Differentiable: backward runs as two more plan-cached MTE GEMMs plus
+    the epilogue's jnp vjp on the full-precision residuals — the
+    straight-through estimator for the quantized formats
+    (kernels/autodiff.py)."""
     from repro.kernels.autodiff import mte_gemm_ad
     interpret = _default_interpret(interpret)
+    fmt = formats_lib.resolve_format(format_policy, a.dtype)
     if policy == "amx":
-        return rigid_gemm_pallas(a, b, c=c, bias=bias, epilogue=epilogue,
+        # The rigid baseline cannot adapt its geometry to the format, but
+        # it still executes the format's arithmetic contract.
+        if fmt.quantized:
+            aq, bq, sa, sb = formats_lib.quantize_operands(a, b, fmt)
+            acc = rigid_gemm_pallas(aq, bq, epilogue=Epilogue(),
+                                    out_dtype=jnp.int32,
+                                    interpret=interpret)
+            acc = formats_lib.dequantize(acc, sa, sb)
+            out = epilogue.apply(acc.astype(jnp.float32), c_in=c, bias=bias)
+            return out.astype(out_dtype)
+        ac = a.astype(fmt.operand_jnp)
+        bc = b.astype(fmt.operand_jnp)
+        return rigid_gemm_pallas(ac, bc, c=c, bias=bias, epilogue=epilogue,
                                  out_dtype=out_dtype, interpret=interpret)
     m, k = a.shape
     n = b.shape[1]
@@ -51,16 +73,19 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
     c_ = c if has_c else jnp.zeros((m, n), jnp.float32)
     bias_ = bias if has_bias else jnp.zeros((n,), jnp.float32)
     return mte_gemm_ad(a, b, c_, bias_, epilogue, policy, out_dtype,
-                       interpret, has_c, has_bias)
+                       interpret, has_c, has_bias, fmt.name)
 
 
 def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
-                 out_dtype=jnp.float32, interpret: Optional[bool] = None):
+                 out_dtype=jnp.float32, format_policy=None,
+                 interpret: Optional[bool] = None):
     """Per-expert GEMM: x (G, C, K) @ w (G, K, N) -> (G, C, N).
-    Differentiable (kernels/autodiff.py)."""
+    ``format_policy`` as in :func:`mte_gemm` (per-group per-channel
+    scales for int8).  Differentiable (kernels/autodiff.py)."""
     from repro.kernels.autodiff import grouped_gemm_ad
     interpret = _default_interpret(interpret)
-    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret)
+    fmt = formats_lib.resolve_format(format_policy, x.dtype)
+    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt.name)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -18,10 +18,25 @@ __all__ = ["mte_gemm", "grouped_gemm", "flash_attention", "flash_decode"]
 
 
 def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
-             out_dtype=jnp.float32, b_transposed: bool = False):
-    """Oracle for mte_gemm / rigid_gemm: f32-accumulated dot + epilogue."""
+             out_dtype=jnp.float32, b_transposed: bool = False,
+             format_policy=None):
+    """Oracle for mte_gemm / rigid_gemm: one dot + epilogue, no blocking.
+
+    With a ``format_policy`` the oracle replicates the policy's contract
+    in pure jnp — operand cast / int8 per-channel quantize, accumulate at
+    ``SEW_o``, dequantize, epilogue — so the kernel routes have an exact
+    same-math reference for every format (the fp32 oracle remains the
+    ground truth the quantized routes are tolerance-bounded against).
+    """
     if b_transposed:
         b = b.T
+    if format_policy is not None:
+        from repro.core import formats
+        fmt = formats.resolve_format(format_policy, a.dtype)
+        acc = formats.xla_gemm(a, b, fmt)
+        out = epilogue.apply(acc.astype(jnp.float32)
+                             if fmt.quantized else acc, c_in=c, bias=bias)
+        return out.astype(out_dtype)
     acc_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
     acc = jnp.dot(a, b, preferred_element_type=acc_dtype)
     out = epilogue.apply(acc, c_in=c, bias=bias)
@@ -29,11 +44,19 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
 
 
 def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
-                 out_dtype=jnp.float32):
+                 out_dtype=jnp.float32, format_policy=None):
     """Oracle for the MoE grouped GEMM.
 
-    x: (G, cap, K); w: (G, K, N) → (G, cap, N).
+    x: (G, cap, K); w: (G, K, N) → (G, cap, N).  ``format_policy``
+    mirrors the kernel-side contract exactly as in :func:`mte_gemm`.
     """
+    if format_policy is not None:
+        from repro.core import formats
+        fmt = formats.resolve_format(format_policy, x.dtype)
+        acc = formats.xla_grouped(x, w, fmt)
+        out = epilogue.apply(acc.astype(jnp.float32)
+                             if fmt.quantized else acc)
+        return out.astype(out_dtype)
     acc = jnp.einsum("gck,gkn->gcn", x, w,
                      preferred_element_type=jnp.float32)
     out = epilogue.apply(acc)

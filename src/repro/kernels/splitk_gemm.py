@@ -46,7 +46,8 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, k: int, bk: int,
     kb = jax.lax.broadcasted_iota(jnp.int32, b.shape, 0) < limit
     b = jnp.where(kb, b, jnp.zeros_like(b))
     acc_ref[...] += jax.lax.dot_general(
-        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(ki == nk - 1)
     def _write():
@@ -55,14 +56,20 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, k: int, bk: int,
 
 @functools.partial(
     jax.jit, static_argnames=("geom", "n_split", "epilogue", "out_dtype",
-                              "interpret"))
+                              "acc_dtype", "interpret"))
 def mte_gemm_splitk_pallas(a, b, c=None, bias=None, *, geom: BlockGeometry,
                            n_split: int = 4,
                            epilogue: Epilogue = Epilogue(),
-                           out_dtype=jnp.float32, interpret: bool = True):
+                           out_dtype=jnp.float32, acc_dtype=None,
+                           interpret: bool = True):
     """``epilogue(a @ b [, c, bias])`` with the K loop split over
-    ``n_split`` grid slices (f32 partials + final fused reduction; the
-    β·C / bias terms join at the reduction, once, not per partial)."""
+    ``n_split`` grid slices (partials in the format's accumulator dtype —
+    f32 by default, int32 for quantized int8 operands — + final fused
+    reduction; the β·C / bias terms join at the reduction, once, not per
+    partial)."""
+    acc_dtype = (jnp.dtype(acc_dtype) if acc_dtype is not None
+                 else (jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer)
+                       else jnp.float32))
     m, k = a.shape
     k2, n = b.shape
     if k2 != k:
@@ -91,8 +98,8 @@ def mte_gemm_splitk_pallas(a, b, c=None, bias=None, *, geom: BlockGeometry,
                          lambda s, i, j, ki, gk=gk: (s * gk + ki, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda s, i, j, ki: (s, i, j)),
-        out_shape=jax.ShapeDtypeStruct((n_split, m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n_split, m, n), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(a, b)
     out = epilogue.apply(jnp.sum(partials, axis=0), c_in=c, bias=bias)

@@ -32,7 +32,9 @@ from repro.distributed.fault import StepWatchdog, supervise
 from repro.launch.mesh import make_elastic_mesh
 from repro.models import model as model_lib
 from repro.optim.optimizer import AdamWConfig, init_opt_state
-from repro.training.trainer import make_train_step
+from repro.training.trainer import (
+    make_train_step, plan_cache_snapshot, restore_plan_cache,
+)
 
 __all__ = ["train_loop", "main"]
 
@@ -64,8 +66,10 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
             start_step = int(manifest["step"])
             data = SyntheticDataset.restore(
                 data.cfg, manifest["extra"].get("data", data.state()))
+            n_plans = restore_plan_cache(manifest.get("gemm_plans"))
             log(f"[train] restored step {start_step} "
-                f"(elastic mesh {dict(zip(mesh.axis_names, mesh.devices.shape))})")
+                f"(elastic mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}"
+                f"{f', {n_plans} warm GEMM plans' if n_plans else ''})")
         else:
             init_fn = jax.jit(
                 lambda key: model_lib.init_params(key, cfg),
@@ -78,6 +82,7 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
         watchdog = StepWatchdog(step_timeout_s)
 
         losses = []
+        gemm_plans = None
         for step in range(start_step, steps):
             watchdog.check()
             watchdog.arm()
@@ -88,6 +93,12 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
             loss = float(metrics["loss"])
             watchdog.disarm()
             losses.append(loss)
+            if gemm_plans is None:
+                # The first executed step traced every GEMM in the model,
+                # so the plan cache now holds the full per-(shape, format)
+                # training plan set — snapshot once, persist with every
+                # checkpoint.
+                gemm_plans = plan_cache_snapshot() or {}
             if step % 10 == 0 or step == steps - 1:
                 log(f"[train] step {step} loss {loss:.4f} "
                     f"gnorm {float(metrics['grad_norm']):.3f} "
@@ -96,10 +107,12 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
                 raise FloatingPointError(f"NaN loss at step {step}")
             if ckpt and (step + 1) % ckpt_every == 0:
                 ckpt.save_async(step + 1, params, opt_state,
-                                extra={"data": data.state()})
+                                extra={"data": data.state()},
+                                gemm_plans=gemm_plans or None)
         if ckpt:
             ckpt.save(steps, params, opt_state,
-                      extra={"data": data.state()})
+                      extra={"data": data.state()},
+                      gemm_plans=gemm_plans or None)
             ckpt.wait()
         watchdog.stop()
         return params, losses
@@ -119,6 +132,8 @@ def main():
     ap.add_argument("--supervise", action="store_true")
     ap.add_argument("--gemm-backend", default=None,
                     choices=[None, "xla", "pallas"])
+    ap.add_argument("--format-policy", default=None,
+                    choices=[None, "fp32", "bf16", "bf16acc", "int8"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -126,6 +141,8 @@ def main():
         cfg = cfg.reduced()
     if args.gemm_backend:
         cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
+    if args.format_policy:
+        cfg = dataclasses.replace(cfg, format_policy=args.format_policy)
 
     def run(attempt: int):
         train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,

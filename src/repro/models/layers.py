@@ -2,6 +2,14 @@
 dispatch layer so the paper's technique is a first-class feature of the
 whole framework (``cfg.gemm_backend``: "xla" inside pjit graphs / dry-run,
 "pallas" for kernel-backed execution).
+
+Precision is owned by the model's :class:`repro.core.formats.FormatPolicy`
+(``cfg.format_policy``, falling back to ``cfg.compute_dtype``): ``dense``
+and the MoE expert FFN hand the policy to the GEMM layer instead of
+``astype``-ing operands at every call site, so q/k/v/o projections, MLPs
+and experts all switch between fp32 / bf16 / bf16acc / int8-with-scales
+by flipping one config field.  The LM head (``unembed``) deliberately
+stays un-quantized (≥ bf16 logits).
 """
 from __future__ import annotations
 
@@ -11,14 +19,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.epilogue import ACTIVATIONS, Epilogue
+from repro.core import formats as formats_lib
 
 __all__ = ["dense", "rmsnorm", "layernorm", "norm", "init_norm", "rope",
            "init_dense", "mlp", "init_mlp", "init_embedding", "embed",
-           "unembed", "ffn_param_specs"]
+           "unembed", "ffn_param_specs", "model_format"]
 
 
 def _cdt(cfg):
     return jnp.dtype(cfg.compute_dtype)
+
+
+def model_format(cfg) -> formats_lib.FormatPolicy:
+    """The model's data-format policy: ``cfg.format_policy`` if set,
+    otherwise inferred from ``cfg.compute_dtype`` (which reproduces the
+    historical per-call-site ``astype(compute_dtype)`` behaviour)."""
+    return formats_lib.resolve_format(
+        getattr(cfg, "format_policy", None), _cdt(cfg))
 
 
 def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
@@ -36,28 +53,28 @@ def dense(x, p, cfg, *, activation: str = "none"):
 
     x: (..., d_in).  The Pallas path fuses bias+activation in-kernel (the
     paper's vector-mode epilogue); the XLA path expresses the same epilogue
-    as jnp ops for GSPMD graphs, where XLA performs the fusion.
+    as jnp ops for GSPMD graphs, where XLA performs the fusion.  Both
+    consume the model's format policy — the operand cast / int8 quantize
+    happens inside the GEMM layer, not here.
     """
     cdt = _cdt(cfg)
-    w = p["w"].astype(cdt)
+    fmt = model_format(cfg)
     b = p.get("b")
-    xc = x.astype(cdt)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
     if cfg.gemm_backend == "pallas":
         from repro.kernels import ops
-        lead = xc.shape[:-1]
-        x2 = xc.reshape(-1, xc.shape[-1])
         epi = Epilogue(has_bias=b is not None, activation=activation)
-        y = ops.mte_gemm(x2, w, bias=(b.astype(jnp.float32)
-                                      if b is not None else None),
+        y = ops.mte_gemm(x2, p["w"], bias=(b.astype(jnp.float32)
+                                           if b is not None else None),
                          epilogue=epi, policy=cfg.gemm_policy,
-                         out_dtype=cdt)
+                         out_dtype=cdt, format_policy=fmt)
         return y.reshape(*lead, -1)
-    y = jnp.einsum("...d,df->...f", xc, w,
-                   preferred_element_type=jnp.float32)
+    y = formats_lib.xla_gemm(x2, p["w"], fmt).astype(jnp.float32)
     if b is not None:
         y = y + b.astype(jnp.float32)
     y = ACTIVATIONS[activation](y)
-    return y.astype(cdt)
+    return y.astype(cdt).reshape(*lead, -1)
 
 
 # -- norms -------------------------------------------------------------------
@@ -170,15 +187,21 @@ def embed(tokens, p, cfg):
 
 
 def unembed(x, p, cfg):
-    """LM head → f32 logits (optionally final-softcapped, gemma2)."""
-    cdt = _cdt(cfg)
+    """LM head → f32 logits (optionally final-softcapped, gemma2).
+
+    The head is never quantized (standard quantized-serving practice):
+    under a quantized format policy the operands stay at the compute
+    dtype; under float policies the policy's operand width applies.
+    """
+    fmt = model_format(cfg)
+    odt = _cdt(cfg) if fmt.quantized else fmt.operand_jnp
     if cfg.tied_embeddings:
-        logits = jnp.einsum("...d,vd->...v", x.astype(cdt),
-                            p["table"].astype(cdt),
+        logits = jnp.einsum("...d,vd->...v", x.astype(odt),
+                            p["table"].astype(odt),
                             preferred_element_type=jnp.float32)
     else:
-        logits = jnp.einsum("...d,dv->...v", x.astype(cdt),
-                            p["head"].astype(cdt),
+        logits = jnp.einsum("...d,dv->...v", x.astype(odt),
+                            p["head"].astype(odt),
                             preferred_element_type=jnp.float32)
     if cfg.final_softcap is not None:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)

@@ -78,26 +78,30 @@ def _positions_in_expert(flat_e, n_experts):
 
 
 def _expert_ffn(buf, p, cfg):
-    """Grouped per-expert SwiGLU over the (E, C, D) dispatch buffer."""
+    """Grouped per-expert SwiGLU over the (E, C, D) dispatch buffer.
+
+    Expert GEMMs consume the model's format policy (per-expert
+    per-channel scales on the int8 route) — precision is decided once in
+    :func:`repro.models.layers.model_format`, not per call site.
+    """
+    from repro.models.layers import model_format
     cdt = jnp.dtype(cfg.compute_dtype)
+    fmt = model_format(cfg)
     if cfg.gemm_backend == "pallas":
         from repro.core.epilogue import Epilogue
         from repro.kernels import ops
-        g = ops.grouped_gemm(buf.astype(cdt), p["gate"].astype(cdt),
+        g = ops.grouped_gemm(buf, p["gate"],
                              epilogue=Epilogue(activation="silu"),
-                             out_dtype=cdt)
-        u = ops.grouped_gemm(buf.astype(cdt), p["up"].astype(cdt),
-                             out_dtype=cdt)
-        return ops.grouped_gemm((g * u).astype(cdt), p["down"].astype(cdt),
-                                out_dtype=cdt)
-    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(cdt),
-                               p["gate"].astype(cdt),
-                               preferred_element_type=jnp.float32))
-    u = jnp.einsum("ecd,edf->ecf", buf.astype(cdt), p["up"].astype(cdt),
-                   preferred_element_type=jnp.float32)
+                             out_dtype=cdt, format_policy=fmt)
+        u = ops.grouped_gemm(buf, p["up"], out_dtype=cdt, format_policy=fmt)
+        return ops.grouped_gemm(g * u, p["down"], out_dtype=cdt,
+                                format_policy=fmt)
+    from repro.core import formats as formats_lib
+    g = jax.nn.silu(formats_lib.xla_grouped(buf, p["gate"], fmt
+                                            ).astype(jnp.float32))
+    u = formats_lib.xla_grouped(buf, p["up"], fmt).astype(jnp.float32)
     h = (g * u).astype(cdt)
-    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cdt),
-                      preferred_element_type=jnp.float32).astype(cdt)
+    return formats_lib.xla_grouped(h, p["down"], fmt).astype(cdt)
 
 
 def apply_moe(x, p, cfg):

@@ -9,8 +9,20 @@ A compact production-shaped server:
 - finished sequences (EOS or max_tokens) free their slot immediately —
   continuous batching, not static batching.
 
+Precision: the engine runs under a data-format policy
+(:mod:`repro.core.formats`) — ``format_policy=`` at construction
+overrides the model config's.  A request may name its *own* policy
+(``Request(format_policy="int8")``): its prefill runs under that format
+(prefill functions are jitted once per format and memoized), while the
+batched decode step runs the engine-level format for all slots — slots
+share one jitted decode, so per-request decode precision would force
+per-request batches.  The GEMM plan cache keys plans per format
+(``GemmSignature.fmt``), so the JSON warm start
+(``plan_cache_path=``) restores format-keyed plans: a server warmed
+with int8 decode plans starts hot for int8 traffic.
+
 Sampling: greedy or temperature.  Everything jit-compiled once per
-(batch-capacity, cache-length) — request churn never recompiles.
+(batch-capacity, cache-length, format) — request churn never recompiles.
 """
 from __future__ import annotations
 
@@ -36,6 +48,7 @@ class Request:
     max_tokens: int = 32
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    format_policy: Optional[str] = None  # per-request prefill precision
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -44,7 +57,10 @@ class Request:
 class ServingEngine:
     def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
                  cache_len: int = 512, prefill_len: int = 128,
-                 seed: int = 0, plan_cache_path: Optional[str] = None):
+                 seed: int = 0, plan_cache_path: Optional[str] = None,
+                 format_policy: Optional[str] = None):
+        if format_policy is not None:
+            cfg = dataclasses.replace(cfg, format_policy=format_policy)
         self.params = params
         self.cfg = cfg
         # Warm-start the GEMM plan cache so the decode hot path starts
@@ -71,13 +87,35 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
 
-        self._prefill = jax.jit(
-            lambda p, b: model_lib.prefill(p, b, cfg, cache_len=cache_len))
+        # One prefill per format (lazily jitted, memoized); one batched
+        # decode under the engine-level format.
+        self._prefill_fns: Dict[Optional[str], object] = {}
         self._decode = jax.jit(
-            lambda p, b, c: model_lib.decode(p, b, c, cfg))
+            lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
+
+    def _prefill_fn(self, format_policy: Optional[str]):
+        """The jitted prefill for one format policy (engine default on
+        ``None``).  Compiled once per distinct format, then reused."""
+        if format_policy == self.cfg.format_policy:
+            format_policy = None  # engine default: share its compilation
+        fn = self._prefill_fns.get(format_policy)
+        if fn is None:
+            cfg = (dataclasses.replace(self.cfg,
+                                       format_policy=format_policy)
+                   if format_policy is not None else self.cfg)
+            fn = jax.jit(lambda p, b: model_lib.prefill(
+                p, b, cfg, cache_len=self.cache_len))
+            self._prefill_fns[format_policy] = fn
+        return fn
 
     # -- client API -----------------------------------------------------------
     def submit(self, req: Request):
+        if req.format_policy is not None:
+            # Reject bad names at the door: a typo'd per-request policy
+            # must fail this submit, not crash the batched loop (and
+            # every other in-flight request) inside run().
+            from repro.core.formats import resolve_format
+            resolve_format(req.format_policy)
         self.queue.append(req)
 
     def save_plan_cache(self, path: Optional[str] = None):
@@ -108,7 +146,7 @@ class ServingEngine:
             prompt = np.asarray(req.prompt, np.int32)[-self.prefill_len:]
             pad = self.prefill_len - len(prompt)
             tokens = np.pad(prompt, (pad, 0))  # left-pad to static shape
-            logits, cache = self._prefill(
+            logits, cache = self._prefill_fn(req.format_policy)(
                 self.params, {"tokens": jnp.asarray(tokens[None])})
             tok = self._sample(logits, req)[0]
             req.output.append(int(tok))

@@ -6,11 +6,21 @@ donated buffers.
 ``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
 ``jax.jit`` with explicit in/out shardings (see launch/train.py and
 launch/dryrun.py).
+
+**Plan persistence**: on the kernel-backed path every GEMM in the step —
+forward, the two backward GEMMs per projection, MoE experts — requests
+its (shape, format)-keyed plan from the autotune cache while the step is
+*traced*, so after the first executed step the process-global cache
+holds the full training plan set.  :func:`plan_cache_snapshot` captures
+it as a JSON document that ``checkpoint.manager.CheckpointManager``
+stores alongside model state, and :func:`restore_plan_cache` re-seeds a
+restarted job (rejecting snapshots tuned for a different substrate) —
+the training-side analogue of the serving engine's warm start.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +29,34 @@ from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
 from repro.optim.optimizer import AdamWConfig, adamw_update
 
-__all__ = ["make_train_step", "make_eval_step"]
+__all__ = ["make_train_step", "make_eval_step", "plan_cache_snapshot",
+           "restore_plan_cache"]
+
+
+def plan_cache_snapshot() -> Optional[dict]:
+    """JSON-able snapshot of the GEMM plans collected so far (None when
+    the cache is empty, e.g. pure-XLA training)."""
+    from repro.core import autotune
+    cache = autotune.plan_cache()
+    return cache.to_json() if len(cache) else None
+
+
+def restore_plan_cache(doc: Optional[dict]) -> int:
+    """Warm-start the global plan cache from a checkpoint snapshot.
+
+    Returns the number of restored plans; 0 when the snapshot is missing
+    or was tuned for a different substrate/profile (a job restarted on
+    different hardware silently re-tunes rather than failing restore —
+    plans are an optimization, never required state).
+    """
+    if not doc:
+        return 0
+    from repro.core import autotune
+    try:
+        return autotune.plan_cache().load_json(doc)
+    except (ValueError, KeyError, TypeError) as e:
+        print(f"[train] plan-cache restore skipped ({e})")
+        return 0
 
 
 def _split_microbatches(batch, n: int):
