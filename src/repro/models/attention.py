@@ -17,9 +17,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense, init_dense, init_norm, rmsnorm, rope
+from repro.models.layers import (dense, init_dense, init_norm, model_format,
+                                 rmsnorm, rope)
 
-__all__ = ["init_attention", "attention", "init_attn_cache", "decode_attention"]
+__all__ = ["init_attention", "attention", "init_attn_cache",
+           "decode_attention", "init_paged_attn_cache",
+           "paged_decode_attention", "quantize_kv", "stack_qkv_weights"]
 
 _NEG_INF = -1e30
 
@@ -53,6 +56,72 @@ def _project_qkv(x, p, cfg, positions):
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     return q, k, v
+
+
+def _project_qkv_grouped(x, p, cfg, positions):
+    """Decode q/k/v as ONE grouped GEMM (G=3) through the plan cache.
+
+    A decode step's three projection GEMVs share M=B and K=d_model and
+    differ only in N; batching them as a grouped launch means the plan
+    cache sees a single grouped signature per step instead of three GEMV
+    signatures (and the grouped kernel's group-grid parallelism covers
+    the underfilled (M, N) grid the GEMVs leave).  k/v columns are
+    zero-padded up to q's width and sliced back off the output.
+
+    The stacked (3, D, Nmax) weight is pure layout: the serving engine
+    precomputes it once per layer (:func:`stack_qkv_weights`, stored as
+    ``p["qkv"]``) so the hot decode step never re-pads; the inline stack
+    below is the fallback for direct ``model.decode`` calls.
+    """
+    from repro.kernels import ops
+    b, s, dm = x.shape
+    hd = cfg.hd
+    nq = cfg.n_heads * hd
+    nkv = cfg.n_kv_heads * hd
+
+    wstack = p.get("qkv")
+    if wstack is None:
+        wstack = stack_qkv_weights(p["q"]["w"], p["k"]["w"],
+                                   p["v"]["w"])           # (3, D, Nmax)
+    x2 = x.reshape(b * s, dm)
+    xg = jnp.broadcast_to(x2[None], (3, b * s, dm))
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = ops.grouped_gemm(xg, wstack, out_dtype=cdt,
+                           format_policy=model_format(cfg))  # (3, B·S, Nmax)
+    q, k, v = out[0, :, :nq], out[1, :, :nkv], out[2, :, :nkv]
+    if cfg.qkv_bias:
+        q = q + p["q"]["b"].astype(q.dtype)
+        k = k + p["k"]["b"].astype(k.dtype)
+        v = v + p["v"]["b"].astype(v.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def stack_qkv_weights(wq, wk, wv):
+    """Stack q/k/v projection weights (…, D, N) into the grouped-GEMM
+    layout (…, 3, D, Nmax), zero-padding narrower outputs.  Leading axes
+    (the scanned group dimension) pass through."""
+    nmax = max(wq.shape[-1], wk.shape[-1])
+
+    def padw(w):
+        pad = [(0, 0)] * w.ndim
+        pad[-1] = (0, nmax - w.shape[-1])
+        return jnp.pad(w, pad)
+
+    return jnp.stack([padw(wq), padw(wk), padw(wv)], axis=-3)
+
+
+def _project_qkv_decode(x, p, cfg, positions):
+    if getattr(cfg, "decode_qkv_grouped", False):
+        return _project_qkv_grouped(x, p, cfg, positions)
+    return _project_qkv(x, p, cfg, positions)
 
 
 _CHUNK_THRESHOLD = 2048  # switch to the scanned formulation above this Skv
@@ -198,13 +267,30 @@ def attention(x, p, cfg, positions, *, window: Optional[int] = None,
 # -- decode (cached) ----------------------------------------------------------
 
 
-def _quantize_kv(x):
-    """Symmetric int8 per-(token, head) quantization.  x: (..., hd)."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
-                    keepdims=True) / 127.0
+def _quantize_kv(x, per_channel: bool = True):
+    """Symmetric int8 KV quantization.  x: (..., kv, hd).
+
+    ``per_channel=True`` (the ``int8`` contract) keeps one scale per
+    (token, head) over hd; ``False`` (``int8pt``, the per-tensor-scale
+    KV default) keeps ONE scale per stored token over (kv, hd), broadcast
+    back to the (..., kv, 1) scale layout so both variants store and
+    dequantize identically.
+    """
+    xf = x.astype(jnp.float32)
+    axes = (-1,) if per_channel else (-2, -1)
+    scale = jnp.max(jnp.abs(xf), axis=axes, keepdims=True) / 127.0
     scale = jnp.where(scale == 0, 1.0, scale)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127)
+    scale = jnp.broadcast_to(scale, x.shape[:-1] + (1,))
     return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_kv(x, fmt):
+    """Quantize KV under a FormatPolicy (public: the serving engine uses
+    this to fill pages from prefill caches).  Non-quantized policies cast."""
+    if fmt.quantized:
+        return _quantize_kv(x, per_channel=fmt.per_channel)
+    return x.astype(fmt.operand_jnp), None
 
 
 def _dequantize_kv(q, scale, dtype):
@@ -234,7 +320,7 @@ def decode_attention(x, p, cfg, cache, pos, *, window: Optional[int] = None):
     b = x.shape[0]
     hd = cfg.hd
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    q, k, v = _project_qkv(x, p, cfg, pos_b[:, None])
+    q, k, v = _project_qkv_decode(x, p, cfg, pos_b[:, None])
     length = cache["k"].shape[1]
     slot_b = pos_b % length  # == pos_b for global layers (pos < cache len)
     quant = "k_scale" in cache
@@ -280,6 +366,119 @@ def decode_attention(x, p, cfg, cache, pos, *, window: Optional[int] = None):
             softcap=cfg.attn_softcap, scale=scale,
             kv_positions=kv_positions,
             q_positions=pos_b[:, None],
+            chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+        out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return dense(out, p["o"], cfg), new_cache
+
+
+# -- paged decode (page-table-indexed KV pool) --------------------------------
+
+
+def _kv_storage_format(cfg):
+    """The FormatPolicy governing paged KV storage (None ⇒ raw compute
+    dtype, no scales)."""
+    from repro.core.formats import resolve_format
+    name = getattr(cfg, "kv_cache_format", None)
+    return resolve_format(name) if name is not None else None
+
+
+def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype):
+    """Paged KV storage for ONE global-attention layer.
+
+    Pages are (num_pages, page_size, kv, hd) slabs shared by every
+    sequence through the page table; ``cfg.kv_cache_format`` selects the
+    stored element type (int8/int8pt add the (num_pages, page_size, kv, 1)
+    f32 scale pages).  Physical page 0 is the reserved null page.
+    """
+    fmt = _kv_storage_format(cfg)
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    if fmt is None:
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype)}
+    if fmt.quantized:
+        sshape = (num_pages, page_size, cfg.n_kv_heads, 1)
+        return {"k_pages": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_pages": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k_pages": jnp.zeros(shape, fmt.operand_jnp),
+            "v_pages": jnp.zeros(shape, fmt.operand_jnp)}
+
+
+def paged_decode_attention(x, p, cfg, cache, pos, page_table, *,
+                           window: Optional[int] = None):
+    """One-token decode over a paged KV pool.
+
+    x: (B, 1, D); pos: scalar or (B,) per-sequence positions; page_table:
+    (B, max_pages) int32 mapping logical page → physical page (−1 ⇒
+    unallocated; inactive slots carry all-(−1) rows and scribble into the
+    reserved null page 0).  The new token's K/V are quantized under
+    ``cfg.kv_cache_format`` and scattered into (physical page, slot) =
+    (table[pos // page], pos % page); attention then reads the
+    table-selected pages — via the page-table-indexed flash-decode kernel
+    on the pallas backend, or a gather + masked XLA attention otherwise.
+    Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    hd = cfg.hd
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _project_qkv_decode(x, p, cfg, pos_b[:, None])
+    page = cache["k_pages"].shape[1]
+    maxp = page_table.shape[1]
+    rows = jnp.arange(b)
+    # Inactive slots (all-unmapped rows) clamp to the null page 0.
+    phys = jnp.maximum(page_table[rows, pos_b // page], 0)
+    slot = pos_b % page
+    fmt = _kv_storage_format(cfg)
+    quant = "k_scale" in cache
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k[:, 0], per_channel=fmt.per_channel)
+        vq, vs = _quantize_kv(v[:, 0], per_channel=fmt.per_channel)
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(kq)
+        new_cache["k_scale"] = cache["k_scale"].at[phys, slot].set(ks)
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(vq)
+        new_cache["v_scale"] = cache["v_scale"].at[phys, slot].set(vs)
+    else:
+        dt = cache["k_pages"].dtype
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(
+            k[:, 0].astype(dt))
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(
+            v[:, 0].astype(dt))
+
+    seq_lens = pos_b + 1
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    if cfg.gemm_backend == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_decode_paged(
+            q[:, 0], new_cache["k_pages"], new_cache["v_pages"],
+            page_table, seq_lens,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=window, softcap=cfg.attn_softcap, scale=scale)
+        out = out.reshape(b, 1, -1)
+    else:
+        # Gather the table-selected pages back into logical order: slot j
+        # of the gathered view is absolute position j, so the masked XLA
+        # attention below is bit-identical to the contiguous-cache path.
+        def gather(leaf):
+            g = leaf[jnp.maximum(page_table, 0)]   # (B, maxp, page, kv, ·)
+            return g.reshape(b, maxp * page, *leaf.shape[2:])
+
+        kg = gather(new_cache["k_pages"])
+        vg = gather(new_cache["v_pages"])
+        if quant:
+            cdt = jnp.dtype(cfg.compute_dtype)
+            kg = _dequantize_kv(kg, gather(new_cache["k_scale"]), cdt)
+            vg = _dequantize_kv(vg, gather(new_cache["v_scale"]), cdt)
+        idx = jnp.arange(maxp * page)[None, :]
+        mapped = jnp.repeat(page_table >= 0, page, axis=1)
+        kv_positions = jnp.where((idx <= pos_b[:, None]) & mapped, idx, -1)
+        out = _xla_attention(
+            q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+            vg.transpose(0, 2, 1, 3), causal=True, window=window,
+            softcap=cfg.attn_softcap, scale=scale,
+            kv_positions=kv_positions, q_positions=pos_b[:, None],
             chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
         out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     return dense(out, p["o"], cfg), new_cache

@@ -32,7 +32,7 @@ from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
                                  mlp, norm, unembed)
 
 __all__ = ["init_params", "forward", "prefill", "decode", "init_cache",
-           "loss_fn", "param_count"]
+           "init_paged_cache", "loss_fn", "param_count"]
 
 
 # -- init ---------------------------------------------------------------------
@@ -104,7 +104,8 @@ def param_count(params) -> int:
 
 
 def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
-                 cache=None, pos=None, cache_len: Optional[int] = None):
+                 cache=None, pos=None, cache_len: Optional[int] = None,
+                 page_table=None):
     """Returns (x, new_cache, aux)."""
     mixer_kind, ffn_kind = kinds
     window = cfg.window if mixer_kind == "local" else None
@@ -113,7 +114,12 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
 
     h = norm(x, lp["norm1"], cfg.norm_type)
     if mixer_kind in ("attn", "local"):
-        if mode == "decode":
+        if mode == "decode" and isinstance(cache, dict) and "k_pages" in cache:
+            # Paged KV pool (serving): the layer reads/writes through the
+            # batch-wide page table instead of a per-slot cache stripe.
+            out, new_cache = attn_mod.paged_decode_attention(
+                h, lp["mixer"], cfg, cache, pos, page_table, window=window)
+        elif mode == "decode":
             out, new_cache = attn_mod.decode_attention(
                 h, lp["mixer"], cfg, cache, pos, window=window)
         elif mode == "prefill":
@@ -189,7 +195,8 @@ def _remat(fn, cfg: ArchConfig):
 
 
 def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
-               cache=None, pos=None, cache_len: Optional[int] = None):
+               cache=None, pos=None, cache_len: Optional[int] = None,
+               page_table=None):
     """Scan the group stack + unrolled tail.  Returns (x, new_cache, aux)."""
     n_groups, n_tail = _group_layout(cfg)
     kinds = cfg.layer_kinds
@@ -212,7 +219,8 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
                 layer_cache = gc[j] if gc is not None else None
                 xc, c_new, aux = _apply_layer(
                     xc, _index_tree(gp, j), cfg, kinds[j], positions, mode,
-                    cache=layer_cache, pos=pos, cache_len=cache_len)
+                    cache=layer_cache, pos=pos, cache_len=cache_len,
+                    page_table=page_table)
                 caches_out.append(c_new)
                 auxc = auxc + aux
             ys = tuple(caches_out) if has_cache else None
@@ -232,7 +240,8 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
         layer_cache = cache["tail"][j] if (cache and mode == "decode") else None
         x, c_new, aux = _apply_layer(
             x, params["tail"][j], cfg, kinds[idx], positions, mode,
-            cache=layer_cache, pos=pos, cache_len=cache_len)
+            cache=layer_cache, pos=pos, cache_len=cache_len,
+            page_table=page_table)
         aux_total = aux_total + aux
         if mode in ("prefill", "decode"):
             new_cache["tail"].append(c_new)
@@ -295,13 +304,17 @@ def decode(params, batch, cache, cfg: ArchConfig):
     """One-token decode: → (logits (B, V), new_cache).
 
     ``batch["pos"]`` is a scalar or a (B,) vector of per-sequence positions
-    (continuous batching: slots sit at different depths)."""
+    (continuous batching: slots sit at different depths).  With a paged
+    cache (``init_paged_cache``), ``batch["page_table"]`` carries the
+    (B, max_pages) int32 logical→physical page map the attention layers
+    read KV through."""
     pos = batch["pos"]
     x, b, s = _inputs_to_x(batch, params, cfg)
     positions = jnp.broadcast_to(
         jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
     x, new_cache, _ = _run_stack(x, params, cfg, positions, "decode",
-                                 cache=cache, pos=pos)
+                                 cache=cache, pos=pos,
+                                 page_table=batch.get("page_table"))
     x = norm(x, params["final_norm"], cfg.norm_type)
     logits = unembed(x, params["embedding"], cfg)
     return logits[:, 0], new_cache
@@ -318,6 +331,44 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
         if mixer in ("attn", "local"):
             window = cfg.window if mixer == "local" else None
             return attn_mod.init_attn_cache(cfg, batch, seq_len, window, cdt)
+        if mixer == "rglru":
+            return rglru_mod.init_rglru_cache(cfg, batch, cdt)
+        if mixer == "ssd":
+            return ssm_mod.init_ssd_cache(cfg, batch, cdt)
+        raise ValueError(mixer)
+
+    groups = None
+    if n_groups:
+        one_group = tuple(layer_cache(kinds[j]) for j in range(cfg.period))
+        groups = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one_group)
+    tail = [layer_cache(kinds[n_groups * cfg.period + j])
+            for j in range(n_tail)]
+    return {"groups": groups, "tail": tail}
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, seq_len: int, *,
+                     num_pages: int, page_size: int):
+    """Decode cache whose global-attention layers store KV in fixed-size
+    pages of a shared pool (physical page 0 reserved as the null page).
+
+    Sliding-window (ring), RG-LRU and SSD layers keep their fixed
+    per-slot state — their decode memory is already O(window)/O(1), so
+    paging them buys nothing.  ``cfg.kv_cache_format`` selects the paged
+    storage format (int8pt/int8 add scale pages).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    n_groups, n_tail = _group_layout(cfg)
+    kinds = cfg.layer_kinds
+
+    def layer_cache(kind):
+        mixer = kind[0]
+        if mixer == "attn":
+            return attn_mod.init_paged_attn_cache(cfg, num_pages, page_size,
+                                                  cdt)
+        if mixer == "local":
+            return attn_mod.init_attn_cache(cfg, batch, seq_len, cfg.window,
+                                            cdt)
         if mixer == "rglru":
             return rglru_mod.init_rglru_cache(cfg, batch, cdt)
         if mixer == "ssd":

@@ -1,0 +1,33 @@
+"""repro.serving — the continuous-batching serving subsystem.
+
+Three layers, policy separated from mechanism:
+
+- :mod:`repro.serving.kv_cache` — :class:`KVPagePool`, the paged KV-cache
+  allocator: fixed-size pages from a shared free list, per-request growth
+  with no recompaction, physical page 0 reserved as the null page.  Pure
+  host-side bookkeeping; the device-side page arrays live in the model
+  cache (``models.model.init_paged_cache``) and are quantized under a
+  ``FormatPolicy`` (``int8pt`` per-tensor-scale int8 is the quantized
+  default).
+- :mod:`repro.serving.scheduler` — :class:`ContinuousBatchingScheduler`,
+  the admit → prefill → decode → evict policy loop: strict-FIFO admission
+  by arrival stamp (starvation-free; preempted requests keep their
+  stamp), token-budget admission control, youngest-first eviction when
+  the pool runs dry, occupancy/throughput metrics.  Subclass its
+  ``_pick_admit`` / ``_pick_victim`` hooks to add a scheduling policy.
+- :mod:`repro.serving.engine` — :class:`ServingEngine`, the model-side
+  executor: per-request prefill (jitted per format), one batched decode
+  over fixed slots reading KV through the page table (the
+  page-table-indexed flash-decode kernel on the pallas backend), grouped
+  decode-GEMV projections (one plan-cache signature per step), GEMM
+  plan-cache warm start/save.
+
+Client API: ``engine.submit(Request(...)); engine.run()`` — see
+``examples/serving_continuous.py``.
+"""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import KVPagePool
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+__all__ = ["Request", "ServingEngine", "KVPagePool",
+           "ContinuousBatchingScheduler"]

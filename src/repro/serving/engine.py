@@ -1,28 +1,41 @@
-"""Serving engine: KV-cache management + continuous batching.
+"""Serving engine: continuous-batching scheduler over a paged KV pool.
 
-A compact production-shaped server:
+The engine is the model-side half of the serving subsystem:
 
-- fixed-capacity decode **slots** (the static shapes pjit needs),
-- ``submit()`` queues requests; the scheduler admits them into free slots
-  by running a (per-request) prefill and writing its cache into the slot,
-- ``step()`` runs one batched decode for all active slots,
-- finished sequences (EOS or max_tokens) free their slot immediately —
-  continuous batching, not static batching.
+- :class:`~repro.serving.scheduler.ContinuousBatchingScheduler` owns
+  every *policy* decision — FIFO admission by token budget, page-pool
+  growth, preemption/eviction (see its docstring for the
+  admit → prefill → decode → evict loop);
+- this class owns params, compiled steps and device state: per-request
+  prefill (jitted once per format, memoized), ONE batched decode over the
+  fixed slot capacity (static shapes — request churn never recompiles),
+  and the paged KV cache (``models.init_paged_cache``) the decode reads
+  through the scheduler's page table.
 
-Precision: the engine runs under a data-format policy
-(:mod:`repro.core.formats`) — ``format_policy=`` at construction
-overrides the model config's.  A request may name its *own* policy
-(``Request(format_policy="int8")``): its prefill runs under that format
-(prefill functions are jitted once per format and memoized), while the
-batched decode step runs the engine-level format for all slots — slots
-share one jitted decode, so per-request decode precision would force
-per-request batches.  The GEMM plan cache keys plans per format
-(``GemmSignature.fmt``), so the JSON warm start
-(``plan_cache_path=``) restores format-keyed plans: a server warmed
-with int8 decode plans starts hot for int8 traffic.
+KV storage: global-attention layers hold fixed-size pages from a shared
+pool, quantized under ``kv_format`` (a
+:class:`repro.core.formats.FormatPolicy` name; ``int8pt`` per-tensor-scale
+int8 is the default whenever the config asks for a quantized cache,
+``None`` stores raw compute-dtype pages).  Sequences grow page-by-page
+with no recompaction; when the pool runs dry the scheduler evicts the
+youngest-arrival request (its pages return to the pool, the request
+re-enters the queue with its original arrival stamp and resumes later by
+re-prefilling the last ``prefill_len`` tokens of its prompt + generated
+prefix — the same static truncation window every admission applies, so
+under pool pressure a long resumed request continues from a truncated
+context, exactly as an equally long fresh prompt would).
 
-Sampling: greedy or temperature.  Everything jit-compiled once per
-(batch-capacity, cache-length, format) — request churn never recompiles.
+Decode GEMVs: with ``grouped_qkv`` (default on the pallas backend) the
+q/k/v projections of a decode step run as ONE grouped GEMM, so the plan
+cache sees a single grouped signature per step instead of three GEMV
+launches — the shape-adaptive batching the paper's small-GEMM claim is
+about.
+
+Precision: as before, ``format_policy=`` overrides the model config's
+policy; a request may name its own prefill policy
+(``Request(format_policy="int8")``).  The GEMM plan cache keys plans per
+format, so the JSON warm start (``plan_cache_path=``) restores
+format-keyed plans — including the grouped decode signature.
 """
 from __future__ import annotations
 
@@ -37,8 +50,37 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
+from repro.serving.scheduler import ContinuousBatchingScheduler
 
 __all__ = ["Request", "ServingEngine"]
+
+
+def _stack_decode_qkv(params):
+    """Precompute the grouped decode-projection layout.
+
+    Every attention mixer gains a stacked (…, 3, D, Nmax) ``qkv`` weight
+    (``attention.stack_qkv_weights``) so the jitted decode reads the
+    grouped operand directly instead of re-padding q/k/v on every step;
+    prefill/forward ignore the extra leaf.  Returns a shallow-copied
+    params tree — the caller's params are untouched.
+    """
+    from repro.models.attention import stack_qkv_weights
+
+    def aug_layer(lp):
+        m = lp.get("mixer")
+        if not (isinstance(m, dict) and {"q", "k", "v"} <= m.keys()):
+            return lp
+        m = dict(m)
+        m["qkv"] = stack_qkv_weights(m["q"]["w"], m["k"]["w"], m["v"]["w"])
+        lp = dict(lp)
+        lp["mixer"] = m
+        return lp
+
+    out = dict(params)
+    if params.get("groups") is not None:
+        out["groups"] = [aug_layer(lp) for lp in params["groups"]]
+    out["tail"] = [aug_layer(lp) for lp in params["tail"]]
+    return out
 
 
 @dataclasses.dataclass
@@ -58,9 +100,30 @@ class ServingEngine:
     def __init__(self, params, cfg: ArchConfig, *, slots: int = 4,
                  cache_len: int = 512, prefill_len: int = 128,
                  seed: int = 0, plan_cache_path: Optional[str] = None,
-                 format_policy: Optional[str] = None):
+                 format_policy: Optional[str] = None,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 kv_format: Optional[str] = None,
+                 token_budget: Optional[int] = None,
+                 grouped_qkv: Optional[bool] = None):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
+        if kv_format is None and cfg.cache_quant:
+            kv_format = "int8pt"  # the quantized-KV default (per-tensor)
+        if kv_format is not None:
+            from repro.core.formats import resolve_format
+            resolve_format(kv_format)
+        if grouped_qkv is None:
+            grouped_qkv = (cfg.gemm_backend == "pallas"
+                           or cfg.decode_qkv_grouped)
+        # Paged storage replaces the legacy contiguous cache_quant slots;
+        # prefill stays full-precision and is quantized at page-write time.
+        from repro.core.geometry import cdiv
+        cache_len = cdiv(cache_len, page_size) * page_size
+        cfg = dataclasses.replace(cfg, cache_quant=False,
+                                  kv_cache_format=kv_format,
+                                  decode_qkv_grouped=bool(grouped_qkv))
+        if grouped_qkv:
+            params = _stack_decode_qkv(params)
         self.params = params
         self.cfg = cfg
         # Warm-start the GEMM plan cache so the decode hot path starts
@@ -79,12 +142,17 @@ class ServingEngine:
         self.slots = slots
         self.cache_len = cache_len
         self.prefill_len = prefill_len
+        self.page_size = page_size
         self._key = jax.random.PRNGKey(seed)
 
-        self.cache = model_lib.init_cache(cfg, slots, cache_len)
+        self.sched = ContinuousBatchingScheduler(
+            slots=slots, max_seq_len=cache_len, page_size=page_size,
+            num_pages=num_pages, token_budget=token_budget)
+        self.cache = model_lib.init_paged_cache(
+            cfg, slots, cache_len, num_pages=self.sched.pool.num_pages,
+            page_size=page_size)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
-        self.queue: List[Request] = []
         self.completed: List[Request] = []
 
         # One prefill per format (lazily jitted, memoized); one batched
@@ -92,6 +160,12 @@ class ServingEngine:
         self._prefill_fns: Dict[Optional[str], object] = {}
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
+
+    @property
+    def queue(self) -> List[Request]:
+        """Waiting requests in arrival order (FIFO line)."""
+        return [e.req for e in
+                sorted(self.sched.waiting, key=lambda e: e.arrival)]
 
     def _prefill_fn(self, format_policy: Optional[str]):
         """The jitted prefill for one format policy (engine default on
@@ -116,7 +190,7 @@ class ServingEngine:
             # every other in-flight request) inside run().
             from repro.core.formats import resolve_format
             resolve_format(req.format_policy)
-        self.queue.append(req)
+        self.sched.submit(req)
 
     def save_plan_cache(self, path: Optional[str] = None):
         """Persist tuned GEMM plans for the next process's warm start."""
@@ -130,49 +204,110 @@ class ServingEngine:
         for _ in range(max_steps):
             self._admit()
             if not any(r is not None for r in self.slot_req):
-                if not self.queue:
+                if not self.sched.waiting:
                     break
+                if self.sched.admission_stuck(self.prefill_len):
+                    head = self.sched._pick_admit()
+                    raise RuntimeError(
+                        f"request rid={head.rid} can never be admitted: "
+                        f"pool={self.sched.pool.describe()}, "
+                        f"token_budget={self.sched.token_budget}")
                 continue
             self.step()
-        live = self.queue + [s for s in self.slot_req if s is not None]
+        live = self.queue + [r for r in self.slot_req if r is not None]
         return {r.rid: r.output for r in self.completed + live}
+
+    def metrics(self) -> Dict[str, float]:
+        """Scheduler counters (occupancy, token split, preemptions) plus
+        engine-level shape facts — the serving-throughput inputs."""
+        m = dict(self.sched.metrics())
+        m.update(slots=self.slots, page_size=self.page_size,
+                 num_pages=self.sched.pool.num_pages,
+                 free_pages=self.sched.pool.free_pages,
+                 kv_format=self.cfg.kv_cache_format or "none")
+        return m
 
     # -- scheduler ------------------------------------------------------------
     def _admit(self):
-        for slot in range(self.slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = np.asarray(req.prompt, np.int32)[-self.prefill_len:]
+        """Admit the longest-waiting requests while capacity allows.
+
+        FIFO fairness: the scheduler considers only the minimum-arrival
+        waiting request (a preempted request keeps its original stamp, so
+        it re-enters at the *front* of the line, not behind requests
+        submitted after it).  Admission runs the request's prefill —
+        resumed requests re-prefill prompt + already-generated tokens —
+        and scatters the prefill KV into the allocated pages.
+        """
+        while True:
+            got = self.sched.pop_admit(self.prefill_len)
+            if got is None:
+                return
+            slot, entry = got
+            req = entry.req
+            context = np.asarray(req.prompt, np.int32).ravel()
+            if req.output:  # resuming a preempted request
+                context = np.concatenate(
+                    [context, np.asarray(req.output, np.int32)])
+            prompt = context[-self.prefill_len:]
             pad = self.prefill_len - len(prompt)
             tokens = np.pad(prompt, (pad, 0))  # left-pad to static shape
-            logits, cache = self._prefill_fn(req.format_policy)(
+            logits, cache_one = self._prefill_fn(req.format_policy)(
                 self.params, {"tokens": jnp.asarray(tokens[None])})
             tok = self._sample(logits, req)[0]
             req.output.append(int(tok))
-            self._write_slot(slot, cache)
+            self._write_admitted(slot, cache_one,
+                                 self.sched.pool.pages_of(entry.arrival))
             self.slot_req[slot] = req
             self.slot_pos[slot] = self.prefill_len
             self._finished(slot)
 
     def step(self):
-        """One batched decode step over all slots.  Per-slot positions ride
-        in ``pos`` (B,) — slots at different depths decode together
-        (continuous batching) with static shapes, so no recompiles."""
+        """One batched decode step over all slots.
+
+        Before the step, every active sequence's page coverage for its
+        next token is guaranteed (growing into the shared pool, evicting
+        the youngest request when the pool runs dry).  Per-slot positions
+        ride in ``pos`` (B,) and the page table in
+        ``batch["page_table"]`` — slots at different depths decode
+        together with static shapes, so no recompiles.
+        """
+        for slot in list(self.sched.active):
+            if self.slot_req[slot] is None:
+                continue
+            evicted = self.sched.ensure_decode(
+                slot, int(self.slot_pos[slot]) + 1)
+            for vslot, _ventry in evicted:
+                self.slot_req[vslot] = None
+                self.slot_pos[vslot] = 0
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
         tokens = np.zeros((self.slots, 1), np.int32)
         for slot, req in enumerate(self.slot_req):
             if req is not None and req.output:
                 tokens[slot, 0] = req.output[-1]
+        table = np.stack([self.sched.table_row(s)
+                          for s in range(self.slots)])
         logits, self.cache = self._decode(
             self.params, {"tokens": jnp.asarray(tokens),
-                          "pos": jnp.asarray(self.slot_pos)}, self.cache)
+                          "pos": jnp.asarray(self.slot_pos),
+                          "page_table": jnp.asarray(table)}, self.cache)
+        self.sched.note_step(len(active))
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
             tok = int(self._sample(logits[slot: slot + 1], req)[0])
             req.output.append(tok)
             self.slot_pos[slot] += 1
-            self._finished(slot)
+            done = self._finished(slot)
+            # Capacity guard: a sequence at the page-table horizon must
+            # finish now — there is no logical page for the next token.
+            if not done and int(self.slot_pos[slot]) >= self.cache_len:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[slot] = None
+                self.slot_pos[slot] = 0
+                self.sched.release(slot, finished=True)
 
     # -- helpers ---------------------------------------------------------------
     def _sample(self, logits, req: Request):
@@ -182,27 +317,86 @@ class ServingEngine:
         return np.asarray(jax.random.categorical(
             sub, logits / req.temperature, axis=-1))
 
-    def _finished(self, slot: int):
+    def _finished(self, slot: int) -> bool:
         req = self.slot_req[slot]
         if req is None:
-            return
+            return True
         hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
         if len(req.output) >= req.max_tokens or hit_eos:
             req.done = True
             self.completed.append(req)
             self.slot_req[slot] = None
+            self.slot_pos[slot] = 0
+            self.sched.release(slot, finished=True)
+            return True
+        return False
 
-    def _write_slot(self, slot: int, cache_one):
-        """Copy a single-sequence prefill cache into batch slot ``slot``.
+    def _write_admitted(self, slot: int, cache_one, page_ids):
+        """Copy a single-sequence prefill cache into the batch state.
 
-        Cache leaves are either group-stacked (G, B, ...) — batch at axis
-        1 — or per-tail-layer (B, ...) — batch at axis 0."""
-        def per_leaf(path, full, one):
-            names = [str(getattr(k, "key", getattr(k, "idx", k)))
-                     for k in path]
-            axis = 1 if "groups" in names else 0
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=axis)
+        Paged attention layers scatter their prompt KV (quantized under
+        ``kv_format``) into the request's allocated physical pages; ring /
+        recurrent layers dynamic-update batch row ``slot``.  Cache leaves
+        are either group-stacked (G, B, ...) — batch at axis 1 — or
+        per-tail-layer (B, ...) — batch at axis 0.
+        """
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
 
-        self.cache = jax.tree_util.tree_map_with_path(
-            per_leaf, self.cache, cache_one)
+        def write_layer(dec, pre, grouped):
+            if isinstance(dec, dict) and "k_pages" in dec:
+                return self._write_pages(dec, pre, ids, grouped)
+            axis = 1 if grouped else 0
+            return jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=axis),
+                dec, pre)
+
+        new_groups = None
+        if self.cache["groups"] is not None:
+            new_groups = tuple(
+                write_layer(d, pc, True)
+                for d, pc in zip(self.cache["groups"], cache_one["groups"]))
+        new_tail = [write_layer(d, pc, False)
+                    for d, pc in zip(self.cache["tail"], cache_one["tail"])]
+        self.cache = {"groups": new_groups, "tail": new_tail}
+
+    def _write_pages(self, dec, pre, ids, grouped: bool):
+        """Scatter one layer's contiguous prefill KV into its pages.
+
+        ``pre`` holds (…, 1, S, kv, hd) contiguous prefill K/V; the first
+        ``len(ids)`` logical pages (covering the prompt) land in physical
+        pages ``ids`` — the same ids across all layers/groups, since the
+        page table is shared by the whole stack.
+        """
+        from repro.core.formats import resolve_format
+        from repro.models import attention as attn_mod
+        page = self.page_size
+        n = ids.shape[0]
+        fmt = (resolve_format(self.cfg.kv_cache_format)
+               if self.cfg.kv_cache_format is not None else None)
+
+        def pack(x):
+            x = x[:, 0] if grouped else x[0]     # drop the B=1 axis
+            s_ax = x.ndim - 3                    # the seq axis
+            x = jax.lax.slice_in_dim(x, 0, n * page, axis=s_ax)
+            lead = x.shape[:s_ax]
+            return x.reshape(*lead, n, page, *x.shape[s_ax + 1:])
+
+        out = dict(dec)
+        for name in ("k", "v"):
+            src = pack(pre[name])
+            if fmt is not None:
+                q, sc = attn_mod.quantize_kv(src, fmt)
+            else:
+                q, sc = src, None
+            pages_key, scale_key = name + "_pages", name + "_scale"
+            q = q.astype(dec[pages_key].dtype)
+            if grouped:
+                out[pages_key] = dec[pages_key].at[:, ids].set(q)
+                if sc is not None:
+                    out[scale_key] = dec[scale_key].at[:, ids].set(sc)
+            else:
+                out[pages_key] = dec[pages_key].at[ids].set(q)
+                if sc is not None:
+                    out[scale_key] = dec[scale_key].at[ids].set(sc)
+        return out

@@ -1,0 +1,122 @@
+"""Paged KV-cache pool: fixed-size pages from a shared free list.
+
+The decode-GEMV regime the paper targets is dominated by KV-cache traffic,
+and a fixed-slot cache (one ``cache_len`` stripe per slot) wastes most of
+it: short requests hold long stripes, and admission is all-or-nothing.
+This module implements the vLLM-style answer at the framework level:
+
+- **pages**: the pool is ``num_pages`` fixed-size pages of ``page_size``
+  token slots each.  A sequence owns an ordered list of physical pages;
+  its *logical* page ``i`` (token positions ``[i·page, (i+1)·page)``) maps
+  to a physical page through the page table.
+- **growth without recompaction**: appending tokens allocates pages from
+  the free list; already-granted physical page ids never move, so decode
+  steps never copy KV (the page table is the only thing that changes).
+- **quantized storage**: the stored element format is a
+  :class:`repro.core.formats.FormatPolicy` (``int8pt`` per-tensor-scale
+  int8 is the quantized default — one f32 scale per stored token; ``int8``
+  keeps per-(token, head) scales; ``bf16``/``fp32`` store unscaled).  The
+  quantize-on-write / dequantize-on-read halves live with the attention
+  layer (:mod:`repro.models.attention`); this pool owns the *allocation*
+  state, which is pure host-side bookkeeping (no jax arrays).
+
+Physical page **0 is reserved as the null page**: unallocated page-table
+entries (−1) clamp to it on the device side, and inactive decode slots
+write their garbage token into it, so it must never be granted to a
+request.
+
+The scheduler (:mod:`repro.serving.scheduler`) decides *when* to
+allocate/evict; this class only answers "can I?" and "do it".
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.geometry import cdiv
+
+__all__ = ["KVPagePool"]
+
+
+class KVPagePool:
+    """Host-side allocator for a shared pool of fixed-size KV pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (page 0 is the reserved "
+                             f"null page), got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # Page 0 is the null page — never granted.
+        self._free: Deque[int] = deque(range(1, self.num_pages))
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- queries ---------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def pages_needed(self, tokens: int) -> int:
+        return cdiv(max(int(tokens), 0), self.page_size)
+
+    def can_allocate(self, n_pages: int) -> bool:
+        return len(self._free) >= n_pages
+
+    def pages_of(self, key: int) -> List[int]:
+        return list(self._owned.get(key, ()))
+
+    # -- allocation ------------------------------------------------------------
+    def ensure(self, key: int, tokens: int) -> bool:
+        """Grow ``key``'s page list to cover ``tokens`` token slots.
+
+        Returns False (and changes nothing) when the free list cannot
+        supply the missing pages — the caller decides who to evict.
+        Existing page ids are never moved (no recompaction): growth only
+        appends to the sequence's page list.
+        """
+        need = self.pages_needed(tokens)
+        owned = self._owned.setdefault(key, [])
+        grow = need - len(owned)
+        if grow <= 0:
+            return True
+        if len(self._free) < grow:
+            return False
+        owned.extend(self._free.popleft() for _ in range(grow))
+        return True
+
+    def release(self, key: int) -> int:
+        """Return all of ``key``'s pages to the free list; returns count."""
+        pages = self._owned.pop(key, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def reset(self) -> None:
+        self._free = deque(range(1, self.num_pages))
+        self._owned.clear()
+
+    # -- device-side view ------------------------------------------------------
+    def table_row(self, key: Optional[int], max_pages: int) -> np.ndarray:
+        """The (max_pages,) int32 page-table row for one sequence.
+
+        Unallocated logical pages are −1 (the device side clamps them to
+        the null page and masks their slots).  ``key=None`` yields the
+        all-unmapped row of an inactive decode slot.
+        """
+        row = np.full((max_pages,), -1, np.int32)
+        if key is not None:
+            pages = self._owned.get(key, ())
+            row[: len(pages)] = pages[:max_pages]
+        return row
+
+    def describe(self) -> str:
+        return (f"KVPagePool({self.num_pages} pages x {self.page_size} "
+                f"tokens, {self.free_pages} free, "
+                f"{len(self._owned)} sequences)")

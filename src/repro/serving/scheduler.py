@@ -1,0 +1,218 @@
+"""Continuous-batching scheduler: admit → prefill → decode → evict.
+
+Pure policy + bookkeeping — no jax arrays and no model knowledge.  The
+:class:`~repro.serving.engine.ServingEngine` owns params/caches and runs
+the compiled steps; it consults this class for every scheduling decision:
+
+- **admission** (:meth:`pop_admit`): strict FIFO over *arrival* order.
+  Only the longest-waiting request is ever considered; if the head cannot
+  be admitted (no free decode slot, token budget exhausted, or the page
+  pool cannot hold its prefill), nothing younger is admitted either.
+  Strict FIFO is what makes starvation-freedom a theorem instead of a
+  tuning outcome: every completion frees capacity, and the head request
+  is first in line for it.  A preempted request keeps its original
+  arrival stamp, so it returns to the *front* of the line, not the back.
+- **token-budget admission**: ``token_budget`` caps the sum of committed
+  token slots (``prefill_len + max_tokens`` per in-flight request) — the
+  knob that keeps worst-case KV growth inside the pool.
+- **growth / preemption** (:meth:`ensure_decode`): before a decode step
+  the engine asks for page coverage of every active sequence's next
+  token.  When the pool runs dry the *youngest-arrival* active request is
+  evicted (pages freed, request requeued with its stamp) — the victim
+  closest to the back of the FIFO line, so eviction never inverts
+  fairness.
+- **metrics**: per-step occupancy, prefill/decode token counts,
+  preemptions — the numbers ``benchmarks/run.py`` reports as the
+  serving-throughput section.
+
+Adding a scheduling policy: subclass and override :meth:`_pick_admit`
+(which waiting request next) and/or :meth:`_pick_victim` (who to evict);
+everything else — budget accounting, pool interaction, metrics — is
+policy-agnostic.  See ROADMAP.md "Serving subsystem".
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.geometry import cdiv
+from repro.serving.kv_cache import KVPagePool
+
+__all__ = ["ScheduledRequest", "ContinuousBatchingScheduler"]
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """A request plus its scheduling state (arrival stamp survives
+    preemption — it IS the FIFO fairness key)."""
+
+    req: object               # repro.serving.engine.Request
+    arrival: int
+    preemptions: int = 0
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, *, slots: int, max_seq_len: int, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 token_budget: Optional[int] = None):
+        self.slots = int(slots)
+        self.page_size = int(page_size)
+        self.max_seq_len = cdiv(max_seq_len, page_size) * page_size
+        self.max_pages_per_seq = self.max_seq_len // page_size
+        if num_pages is None:
+            # Roomy default: every slot can grow to max_seq_len (+ null
+            # page) — preemption then only triggers under explicit
+            # overcommit (smaller num_pages).
+            num_pages = self.slots * self.max_pages_per_seq + 1
+        self.pool = KVPagePool(num_pages, page_size)
+        self.token_budget = token_budget
+        self.waiting: List[ScheduledRequest] = []
+        self.active: Dict[int, ScheduledRequest] = {}   # slot -> entry
+        self._arrival = itertools.count()
+        # events: ("submit"|"admit"|"preempt"|"finish", rid) in order —
+        # what the fairness tests assert on.
+        self.events: List[Tuple[str, int]] = []
+        # metrics
+        self.decode_steps = 0
+        self.active_step_sum = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.preemptions = 0
+        self.completed_requests = 0
+
+    # -- queue -----------------------------------------------------------------
+    def submit(self, req) -> ScheduledRequest:
+        entry = ScheduledRequest(req=req, arrival=next(self._arrival))
+        self.waiting.append(entry)
+        self.events.append(("submit", entry.rid))
+        return entry
+
+    def requeue(self, entry: ScheduledRequest) -> None:
+        """Return a preempted entry to the queue, stamp intact."""
+        entry.preemptions += 1
+        self.preemptions += 1
+        self.waiting.append(entry)
+        self.events.append(("preempt", entry.rid))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _committed_tokens(self, prefill_len: int) -> int:
+        return sum(prefill_len + int(getattr(e.req, "max_tokens", 0))
+                   for e in self.active.values())
+
+    # -- policy hooks (override to add a scheduling policy) --------------------
+    def _pick_admit(self) -> ScheduledRequest:
+        """Which waiting request is next in line: oldest arrival (FIFO)."""
+        return min(self.waiting, key=lambda e: e.arrival)
+
+    def _pick_victim(self, protect: Optional[int]) -> Optional[int]:
+        """Which active slot to evict: youngest arrival, never
+        ``protect`` unless it is the only one left."""
+        slots = [s for s in self.active if s != protect]
+        if not slots:
+            slots = list(self.active)
+        if not slots:
+            return None
+        return max(slots, key=lambda s: self.active[s].arrival)
+
+    # -- admission -------------------------------------------------------------
+    def pop_admit(self, prefill_len: int
+                  ) -> Optional[Tuple[int, ScheduledRequest]]:
+        """Admit the longest-waiting request if a slot, the token budget
+        and the page pool allow it.  Strict FIFO: a blocked head blocks
+        the whole queue (starvation-freedom over throughput)."""
+        if not self.waiting:
+            return None
+        free = self.free_slots()
+        if not free:
+            return None
+        head = self._pick_admit()
+        cost = prefill_len + int(getattr(head.req, "max_tokens", 0))
+        if (self.token_budget is not None
+                and self._committed_tokens(prefill_len) + cost
+                > self.token_budget):
+            return None
+        if not self.pool.ensure(head.arrival, prefill_len):
+            return None
+        slot = free[0]
+        self.waiting.remove(head)
+        self.active[slot] = head
+        self.prefill_tokens += prefill_len
+        self.events.append(("admit", head.rid))
+        return slot, head
+
+    def admission_stuck(self, prefill_len: int) -> bool:
+        """True when nothing is running and the head request can *never*
+        be admitted (pool/budget too small for it alone) — the caller
+        should raise instead of spinning."""
+        if self.active or not self.waiting:
+            return False
+        head = self._pick_admit()
+        cost = prefill_len + int(getattr(head.req, "max_tokens", 0))
+        if self.token_budget is not None and cost > self.token_budget:
+            return True
+        return not self.pool.can_allocate(self.pool.pages_needed(prefill_len))
+
+    # -- decode-time growth / preemption ---------------------------------------
+    def ensure_decode(self, slot: int, tokens: int
+                      ) -> List[Tuple[int, ScheduledRequest]]:
+        """Guarantee page coverage for ``slot``'s next decode token.
+
+        Returns the (slot, entry) pairs evicted to make room — possibly
+        including ``slot`` itself when it is the youngest and the pool
+        still cannot cover it.  Evicted entries are already requeued.
+        """
+        entry = self.active[slot]
+        evicted: List[Tuple[int, ScheduledRequest]] = []
+        while not self.pool.ensure(entry.arrival, tokens):
+            victim = self._pick_victim(protect=slot)
+            if victim is None:
+                break
+            ventry = self.active.pop(victim)
+            self.pool.release(ventry.arrival)
+            self.requeue(ventry)
+            evicted.append((victim, ventry))
+            if victim == slot:
+                break
+        return evicted
+
+    def release(self, slot: int, *, finished: bool = True) -> None:
+        entry = self.active.pop(slot)
+        self.pool.release(entry.arrival)
+        if finished:
+            self.completed_requests += 1
+            self.events.append(("finish", entry.rid))
+
+    # -- device-side view / metrics --------------------------------------------
+    def table_row(self, slot: int):
+        entry = self.active.get(slot)
+        return self.pool.table_row(
+            entry.arrival if entry is not None else None,
+            self.max_pages_per_seq)
+
+    def note_step(self, n_active: int) -> None:
+        self.decode_steps += 1
+        self.active_step_sum += n_active
+        self.decode_tokens += n_active
+
+    def metrics(self) -> Dict[str, float]:
+        occ = (self.active_step_sum / (self.decode_steps * self.slots)
+               if self.decode_steps else 0.0)
+        return {
+            "decode_steps": self.decode_steps,
+            "batch_occupancy": occ,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "preemptions": self.preemptions,
+            "completed_requests": self.completed_requests,
+        }
