@@ -22,6 +22,12 @@ continuous-batching engine (paged KV pool, grouped decode GEMVs) over a
 mixed arrival pattern and records requests/s, tokens/s, mean batch
 occupancy, the prefill-vs-decode token split, preemptions, and the
 number of grouped decode plan-cache signatures.
+
+The **graph-fusion** section (``graph.fusion.*``) compiles a transformer
+MLP block and the decode-step q/k/v projection through ``repro.graph``
+and records eager vs compiled kernel-dispatch counts (traced, not
+estimated), wall-clock per path, and the compiled programs'
+whole-program modeled time; CI asserts compiled < eager.
 """
 from __future__ import annotations
 
@@ -74,6 +80,73 @@ def format_sweep_rows(iters: int = 3):
                          f"{r['measured_us']:.1f}",
                          f"model {r['modeled_us']:.2f}us "
                          f"({model_x:.2f}x fp32),{r['route']}"))
+    return rows
+
+
+def graph_fusion_rows(smoke: bool = True):
+    """Graph-fusion section: eager vs compiled dispatch counts + time.
+
+    Two pipelines the graph subsystem compiles in the models: a
+    transformer MLP block (swiglu: gate+up group into one launch) and the
+    decode-step q/k/v projection (3 GEMVs → one GroupNode launch).
+    Dispatch counts come from the repro.graph tracing hook — actual
+    kernel launches, not estimates; modeled time is the compiled
+    program's whole-program score; measured time is substrate-honest
+    wall-clock (CPU interpret here, the TPU target on real hardware).
+    """
+    import dataclasses
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.graph import schedule as graph_schedule, trace as graph_trace
+    from repro.models import attention as attn_mod
+    from repro.models import layers as layers_mod
+
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              gemm_backend="pallas", head_dim=16)
+    key = jax.random.PRNGKey(0)
+    mlp_p = layers_mod.init_mlp(key, cfg)
+    attn_p = attn_mod.init_attention(key, cfg)
+    x_mlp = jax.random.normal(key, (1, 8, cfg.d_model), jnp.float32)
+    x_dec = jax.random.normal(key, (4, 1, cfg.d_model), jnp.float32)
+    pos = jnp.zeros((4, 1), jnp.int32)
+    cfg_dec = dataclasses.replace(cfg, decode_qkv_grouped=True)
+
+    def count(fn):
+        with graph_trace.trace_gemms() as cap:
+            out = fn()
+            jax.tree.map(lambda a: a.block_until_ready(), out)
+        t0 = time.perf_counter()
+        jax.tree.map(lambda a: a.block_until_ready(), fn())
+        return cap.n_dispatches, (time.perf_counter() - t0) * 1e6
+
+    rows = []
+    for name, eager_fn, compiled_fn in (
+        ("mlp",
+         lambda: layers_mod.mlp(
+             x_mlp, mlp_p, dataclasses.replace(cfg, use_graph=False)),
+         lambda: layers_mod.mlp(x_mlp, mlp_p, cfg)),
+        ("decode_qkv",
+         lambda: attn_mod._project_qkv(x_dec, attn_p, dataclasses.replace(
+             cfg, use_graph=False), pos),
+         lambda: attn_mod._project_qkv_grouped(x_dec, attn_p, cfg_dec,
+                                               pos)),
+    ):
+        n_eager, t_eager = count(eager_fn)
+        n_comp, t_comp = count(compiled_fn)
+        rows.append((f"graph.fusion.{name}.eager_dispatches",
+                     f"{t_eager:.1f}", f"{n_eager}"))
+        rows.append((f"graph.fusion.{name}.compiled_dispatches",
+                     f"{t_comp:.1f}", f"{n_comp}"))
+    # Whole-program modeled time (TPU-target score) + compile count.
+    progs = graph_schedule.compiled_programs()
+    rows.append(("graph.fusion.modeled_total_us", "",
+                 f"{sum(p.modeled_s for p in progs) * 1e6:.2f}"))
+    rows.append(("graph.fusion.programs_compiled", "",
+                 f"{graph_schedule.program_stats()['compiles']}"))
     return rows
 
 
@@ -253,6 +326,9 @@ def main() -> None:
 
     # -- format sweep: fp32 vs bf16 vs int8 per shape (the SEW dimension) --------
     csv_rows.extend(format_sweep_rows(iters=1 if args.smoke else 3))
+
+    # -- graph fusion: eager vs compiled dispatch counts (MLP + decode step) -----
+    csv_rows.extend(graph_fusion_rows(smoke=args.smoke))
 
     # -- serving throughput (continuous batching over the paged KV pool) ---------
     csv_rows.extend(serving_rows(smoke=args.smoke))

@@ -73,7 +73,14 @@ def main():
     engine.save_plan_cache()
 
     # -- warm engine: the grouped decode plan comes back pre-tuned ---------
+    # Simulate a fresh process: drop BOTH caches.  (Within one process
+    # the compiled decode-step program is memoized with its plan pinned,
+    # so the plan cache would never even be consulted again; the JSON
+    # warm start is what makes a *new* process compile with zero solver
+    # calls.)
     autotune.reset_cache()
+    from repro.graph import schedule as graph_schedule
+    graph_schedule.reset_programs()
     engine2 = ServingEngine(params, cfg, slots=2, cache_len=64,
                             prefill_len=16, page_size=16,
                             kv_format="int8pt", grouped_qkv=True,

@@ -114,6 +114,15 @@ class ArchConfig:
     #                                         the plan cache sees a single
     #                                         grouped signature per step
     #                                         instead of 3 GEMV launches
+    use_graph: bool = True                  # execute the MLP block and the
+    #                                         attention projections as
+    #                                         compiled repro.graph programs
+    #                                         (kernel backend): traced →
+    #                                         fused → program-scheduled
+    #                                         against the plan cache.
+    #                                         False = eager per-GEMM
+    #                                         dispatch (launchers expose
+    #                                         --no-graph for debugging).
 
     def __post_init__(self):
         assert self.n_heads % self.n_kv_heads == 0

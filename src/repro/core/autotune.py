@@ -67,7 +67,8 @@ from repro.core.tile_state import SEW
 
 __all__ = [
     "GemmSignature", "ExecutionPlan", "PlanCache", "CacheStats",
-    "enumerate_candidates", "execute_plan", "get_plan", "plan_cache",
+    "enumerate_candidates", "execute_plan", "get_plan", "plan_with_geometry",
+    "plan_cache",
     "reset_cache", "configure", "cache_stats", "save_plans", "load_plans",
     "benchmark_shape", "benchmark_format", "DEFAULT_N_CORES",
 ]
@@ -159,7 +160,8 @@ class ExecutionPlan:
     route: str                       # "mte" | "splitk" | "rigid" | "grouped"
     predicted_s: float
     measured_s: Optional[float] = None
-    source: str = "analytic"         # "analytic" | "measured" | "warmstart"
+    source: str = "analytic"   # "analytic" | "measured" | "warmstart" |
+    #                            "program" (pinned by repro.graph.schedule)
 
     @property
     def n_split(self) -> int:
@@ -600,17 +602,26 @@ def _plan_from_json(entry: Dict) -> ExecutionPlan:
 # ---------------------------------------------------------------------------
 
 _GLOBAL = PlanCache()
+_GENERATION = 0
 
 
 def plan_cache() -> PlanCache:
     return _GLOBAL
 
 
+def cache_generation() -> int:
+    """Bumped on every :func:`reset_cache` — consumers that memoize
+    derived state (compiled graph programs pin plans granted here) check
+    it so a cache reset invalidates them too."""
+    return _GENERATION
+
+
 def reset_cache(maxsize: int = 4096, n_cores: int = DEFAULT_N_CORES,
                 profile: TpuProfile = TPU_V5E) -> PlanCache:
     """Replace the process-global cache (tests / reconfiguration)."""
-    global _GLOBAL
+    global _GLOBAL, _GENERATION
     _GLOBAL = PlanCache(maxsize=maxsize, profile=profile, n_cores=n_cores)
+    _GENERATION += 1
     return _GLOBAL
 
 
@@ -647,6 +658,30 @@ def get_plan(m: int, n: int, k: int, dtype_in, dtype_out=None, *,
     sig = GemmSignature.make(m, n, k, dtype_in, dtype_out, epilogue,
                              policy, backend, group, fmt)
     return _GLOBAL.plan(sig, measure=measure, interpret=interpret)
+
+
+def plan_with_geometry(m: int, n: int, k: int, dtype_in, dtype_out=None, *,
+                       epilogue: Optional[Epilogue] = None,
+                       policy: Policy = "mte", backend: str = "pallas",
+                       group: int = 1, fmt: Optional[str] = None,
+                       geometry: BlockGeometry) -> ExecutionPlan:
+    """A plan pinned to an explicit block geometry — no cache interaction.
+
+    This is the program-level scheduling hook (:mod:`repro.graph.schedule`):
+    a compiled program may trade the per-GEMM-optimal cached plan for a
+    program-optimal one (e.g. a tile shape kept stable across a fused
+    chain), and executes it by pinning the geometry here instead of
+    re-entering the planner.  The route is re-derived from the geometry so
+    split-K / grouped overrides launch the right kernel.
+    """
+    dtype_out = dtype_out if dtype_out is not None else dtype_in
+    sig = GemmSignature.make(m, n, k, dtype_in, dtype_out, epilogue,
+                             policy, backend, group, fmt)
+    return ExecutionPlan(signature=sig, geometry=geometry,
+                         route=_route_for(sig, geometry),
+                         predicted_s=score_geometry(
+                             sig, geometry, _GLOBAL.profile, _GLOBAL.n_cores),
+                         source="program")
 
 
 def save_plans(path: str) -> None:

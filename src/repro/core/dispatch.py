@@ -149,17 +149,26 @@ def mte_gemm(a, b, c=None, bias=None, *,
     # backends agree numerically.
     if backend == "pallas":
         from repro.kernels import ops
+        # ops.mte_gemm records into an active repro.graph capture itself.
         return ops.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
                             policy=policy, out_dtype=out_dtype,
                             format_policy=fmt, interpret=interpret)
     if backend == "reference":
         from repro.kernels import ref
-        return ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
-                            out_dtype=out_dtype, format_policy=fmt)
-    # XLA path: one dot at the policy's accumulator width + jnp epilogue;
-    # XLA fuses the epilogue into the GEMM consumer on TPU, matching
-    # MTE's in-register vector-mode post-ops.
-    acc = formats.xla_gemm(a, b, fmt)
-    out = epilogue.apply(acc.astype(jnp.float32)
-                         if fmt.quantized else acc, c_in=c, bias=bias)
-    return out.astype(out_dtype)
+        out = ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
+                           out_dtype=out_dtype, format_policy=fmt)
+    else:
+        # XLA path: one dot at the policy's accumulator width + jnp
+        # epilogue; XLA fuses the epilogue into the GEMM consumer on TPU,
+        # matching MTE's in-register vector-mode post-ops.
+        acc = formats.xla_gemm(a, b, fmt)
+        out = epilogue.apply(acc.astype(jnp.float32)
+                             if fmt.quantized else acc, c_in=c, bias=bias)
+        out = out.astype(out_dtype)
+    from repro.graph import trace as graph_trace
+    sink = graph_trace.active()
+    if sink is not None:
+        sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
+                         fmt=fmt.name, policy=policy, out_dtype=out_dtype,
+                         backend=backend)
+    return out

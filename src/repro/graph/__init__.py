@@ -1,0 +1,53 @@
+"""repro.graph — a GEMM-program IR that traces, fuses and schedules whole
+layer pipelines.
+
+The paper's MTE decouples the instruction stream from the
+microarchitecture: tiles are configured once through the CSR, then GEMMs
+and their element-wise epilogues execute on the same registers with no
+memory round-trip (§III-C4).  Eager dispatch applies that idea one
+``mte_gemm`` call at a time; this subsystem applies it to *programs* — the
+chain of GEMM / epilogue / format-boundary ops one model layer issues:
+
+- :mod:`repro.graph.ir` — the typed IR: :class:`~repro.graph.ir.GemmNode`
+  (one dispatch under a FormatPolicy), :class:`~repro.graph.ir.EpilogueNode`
+  (element-wise glue), :class:`~repro.graph.ir.CastNode` (format
+  boundary), :class:`~repro.graph.ir.GroupNode` (sibling GEMMs as one
+  grouped launch), composed into an SSA :class:`~repro.graph.ir.Graph`
+  with a stable program signature.
+- :mod:`repro.graph.trace` — how programs are captured: the explicit
+  :class:`~repro.graph.trace.GraphBuilder` (full fidelity; what the model
+  layers use) and :func:`~repro.graph.trace.trace_gemms`, a tracing mode
+  hooked into ``dispatch.mte_gemm`` / ``kernels.ops`` that records every
+  GEMM a running layer issues (dispatch auditing + wiring recovery).
+- :mod:`repro.graph.fuse` — rewrite rules: epilogue absorption into the
+  producing kernel (bias/activation/residual ride the accumulator),
+  cast-pair elimination at matching format boundaries (producer dequant +
+  consumer quant collapse to the direct int path), sibling-GEMM grouping
+  (q/k/v, gated-MLP gate+up → ONE grouped signature).
+- :mod:`repro.graph.schedule` — whole-program scheduling against the
+  autotune plan cache: grouped-vs-ungrouped programs scored with
+  ``perfmodel.tpu_gemm_time`` (+ launch/tile-reconfiguration overheads),
+  tile stabilization across fused chains, memoization per
+  ``(graph signature, backend)``, plan persistence through the existing
+  JSON plan-cache warm start, differentiable execution (STE backward).
+
+Consumers: ``models/layers.py`` (the MLP block), ``models/attention.py``
+(q/k/v projections, the serving decode-step program), and
+``benchmarks/run.py`` (the graph-fusion section).  ``ArchConfig.use_graph``
+(default True, pallas backend) gates the compiled path;
+``launch/serve.py --no-graph`` / ``launch/train.py --no-graph`` restore
+eager dispatch for debugging.  See ROADMAP.md "Graph subsystem" and
+``examples/graph_fusion.py``.
+"""
+from repro.graph.ir import (CastNode, EpilogueNode, GemmNode, Graph,
+                            GroupNode, stack_group_weights)
+from repro.graph.trace import GraphBuilder, trace_gemms
+from repro.graph.schedule import (CompiledProgram, compile_cached,
+                                  compile_graph)
+from repro.graph.fuse import fuse as fuse_graph
+
+__all__ = [
+    "CastNode", "EpilogueNode", "GemmNode", "GroupNode", "Graph",
+    "GraphBuilder", "CompiledProgram", "compile_graph", "compile_cached",
+    "fuse_graph", "trace_gemms", "stack_group_weights",
+]

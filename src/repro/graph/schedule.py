@@ -1,0 +1,577 @@
+"""Program-level scheduling: compile a fused Graph against the plan cache.
+
+Eager dispatch plans every GEMM in a vacuum; this module plans a *whole
+program*:
+
+1. **Candidate programs.**  The always-profitable rewrites (epilogue
+   absorption, cast elimination — :mod:`repro.graph.fuse`) run first;
+   sibling grouping is a *trade* (one grouped launch at reduced per-group
+   core occupancy vs. N launches), so both the grouped and ungrouped
+   programs are scored with :func:`repro.core.perfmodel.tpu_gemm_time`
+   and the cheaper one wins.  Program cost = Σ per-node modeled time
+   + a per-launch overhead + a tile-reconfiguration overhead whenever
+   consecutive dispatches change block geometry (the CSR-rewrite cost the
+   paper's "configure once, execute many" claim amortizes, §III-B) + the
+   weight re-stacking traffic a grouped node pays when no precomputed
+   stacked operand exists.
+2. **Plan grants.**  Each kernel node of the winning program requests its
+   plan from the process-global autotune cache — so program plans are
+   persisted through the existing JSON plan-cache warm start, and a
+   warm-started process compiles the same program with zero solver calls.
+3. **Tile stabilization.**  Chains of plain-MTE nodes may trade their
+   per-GEMM-optimal geometries for ONE shared geometry when the modeled
+   total (no reconfigurations) beats the sum of individual optima — the
+   per-GEMM plans in the cache stay optimal; the program pins its
+   overrides at execution via ``ops.mte_gemm(geometry=...)``.
+
+Compiled programs are memoized per ``(graph signature, backend)``
+(:func:`compile_graph`) and per caller key (:func:`compile_cached`, which
+skips graph construction entirely on a hit).  Execution interprets the
+node list once per jax trace; every kernel node launches through the
+differentiable ``kernels.ops`` entry points (STE backward for quantized
+formats — grouped member-quantized launches get a dedicated custom VJP
+whose backward is the unfused jnp reference), so compiled programs are
+differentiable end to end while forward parity with eager dispatch holds
+per format.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core import formats as formats_lib
+from repro.core.epilogue import Epilogue
+from repro.core.autotune import (ExecutionPlan, GemmSignature, PlanCache,
+                                 _route_for, score_geometry)
+from repro.graph import fuse as fuse_mod
+from repro.graph.ir import (CastNode, EpilogueNode, GemmNode, Graph,
+                            GroupNode, stack_group_weights)
+
+__all__ = ["CompiledProgram", "compile_graph", "compile_cached",
+           "reset_programs", "program_stats", "compiled_programs",
+           "DISPATCH_OVERHEAD_S", "RECONFIG_S"]
+
+# Per-launch overhead (grid setup + kernel dispatch) and the extra cost of
+# re-configuring the tile CSR (block geometry / SEW) between consecutive
+# launches.  Only program-level *choices* read these constants — per-GEMM
+# plan scoring is unchanged — so they bias fused programs toward fewer
+# launches and stable tile shapes exactly where the compute difference is
+# smaller than the launch overhead.
+DISPATCH_OVERHEAD_S = 1.0e-6
+RECONFIG_S = 2.0e-7
+
+
+# ---------------------------------------------------------------------------
+# Signatures: the compile-time mirror of what execution launches
+# ---------------------------------------------------------------------------
+
+
+def _group_kernel_out_dtype(node: GroupNode, fmt) -> str:
+    """The grouped kernel's own output dtype.  The member path (no
+    precomputed stack) always emits accumulator-precision members so the
+    post-kernel epilogues apply exactly where the fused eager kernel
+    would apply them; a prestacked launch with identity members (the
+    serving decode step) comes out at the node's target dtype directly."""
+    if fmt.quantized:
+        return "float32"          # dequantized accumulator
+    if node.stacked is None \
+            or any(not e.is_identity for e in node.epilogues):
+        return fmt.accum_dtype
+    return node.out_dtype
+
+
+def _node_signature(g: Graph, node) -> GemmSignature:
+    """The GemmSignature this node's launch resolves to — kept in exact
+    mirror with ``kernels/autodiff.py`` so the plans compiled here are
+    the plans eager execution of the same GEMM would be granted."""
+    fmt = formats_lib.FORMATS[node.fmt]
+    if isinstance(node, GemmNode):
+        m, k = g.shape(node.a)
+        n = g.shape(node.b)[1]
+        if fmt.quantized:
+            return GemmSignature.make(m, n, k, jnp.int8, jnp.int32,
+                                      Epilogue(), node.policy, "pallas",
+                                      1, node.fmt)
+        return GemmSignature.make(m, n, k, fmt.operand_jnp, node.out_dtype,
+                                  node.epilogue, node.policy, "pallas",
+                                  1, node.fmt)
+    assert isinstance(node, GroupNode)
+    a_shape = g.shape(node.a)
+    m, k = a_shape[-2], a_shape[-1]
+    nmax = (g.shape(node.stacked)[-1] if node.stacked is not None
+            else max(g.shape(w)[1] for w in node.weights))
+    if fmt.quantized:
+        return GemmSignature.make(m, nmax, k, jnp.int8, jnp.int32,
+                                  Epilogue(), "mte", "pallas",
+                                  node.group, node.fmt)
+    return GemmSignature.make(m, nmax, k, fmt.operand_jnp,
+                              _group_kernel_out_dtype(node, fmt),
+                              Epilogue(), "mte", "pallas",
+                              node.group, node.fmt)
+
+
+# ---------------------------------------------------------------------------
+# Whole-program scoring
+# ---------------------------------------------------------------------------
+
+
+def _restack_seconds(g: Graph, node: GroupNode, profile) -> float:
+    """HBM round-trip of building the stacked operand at run time (read
+    members + write the stack); zero when a precomputed stack is fed."""
+    if node.stacked is not None:
+        return 0.0
+    fmt = formats_lib.FORMATS[node.fmt]
+    k = g.shape(node.a)[-1]
+    nmax = max(g.shape(w)[1] for w in node.weights)
+    nbytes = 2 * node.group * k * nmax * fmt.operand_jnp.itemsize
+    return nbytes / profile.hbm_bw_bytes_per_s
+
+
+def _program_time(g: Graph, cache: Optional[PlanCache] = None,
+                  plans: Optional[Dict[int, ExecutionPlan]] = None,
+                  profile=None) -> float:
+    """Whole-program modeled seconds: per-node plan score + per-launch
+    overhead + restack traffic + tile reconfigurations.  Plans come from
+    ``plans`` (already-granted, e.g. after stabilization) or are looked
+    up/solved in ``cache`` — one cost model for candidate scoring and
+    for the reported ``CompiledProgram.modeled_s``."""
+    profile = profile if profile is not None else cache.profile
+    total = 0.0
+    prev_geom = None
+    for idx in g.kernel_nodes():
+        node = g.nodes[idx]
+        plan = (plans[idx] if plans is not None
+                else cache.plan(_node_signature(g, node)))
+        total += plan.predicted_s + DISPATCH_OVERHEAD_S
+        if isinstance(node, GroupNode):
+            total += _restack_seconds(g, node, profile)
+        if prev_geom is not None and plan.geometry != prev_geom:
+            total += RECONFIG_S
+        prev_geom = plan.geometry
+    return total
+
+
+def _vmem_ok(geom, profile) -> bool:
+    return geom.vmem_bytes() <= int(profile.vmem_bytes
+                                    * profile.vmem_budget_frac)
+
+
+def _stabilize_tiles(g: Graph, plans: Dict[int, ExecutionPlan],
+                     profile, n_cores: int) -> Dict[int, ExecutionPlan]:
+    """Trade per-GEMM-optimal geometries for one shared tile shape across
+    a chain of plain-MTE nodes when the modeled total (zero tile
+    reconfigurations) beats the per-node optima plus their reconfig cost."""
+    idxs = [i for i in g.kernel_nodes()
+            if isinstance(g.nodes[i], GemmNode)
+            and i in plans and plans[i].route == "mte"]
+    if len(idxs) < 2 or len({g.nodes[i].fmt for i in idxs}) != 1:
+        return plans
+
+    def reconfigs(geoms: List) -> int:
+        return sum(1 for a, b in zip(geoms, geoms[1:]) if a != b)
+
+    current = (sum(plans[i].predicted_s for i in idxs)
+               + RECONFIG_S * reconfigs([plans[i].geometry for i in idxs]))
+    best_geom, best_t = None, current
+    for cand in {plans[i].geometry for i in idxs}:
+        if cand.split_k > 1 or not _vmem_ok(cand, profile):
+            continue
+        t = sum(score_geometry(plans[i].signature, cand, profile, n_cores)
+                for i in idxs)
+        if t < best_t:
+            best_geom, best_t = cand, t
+    if best_geom is None:
+        return plans
+    out = dict(plans)
+    for i in idxs:
+        sig = plans[i].signature
+        out[i] = ExecutionPlan(
+            signature=sig, geometry=best_geom,
+            route=_route_for(sig, best_geom),
+            predicted_s=score_geometry(sig, best_geom, profile, n_cores),
+            source="program")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compiled programs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """An executable scheduled program.
+
+    ``plans`` maps kernel-node index → the granted/pinned ExecutionPlan
+    (pallas backend; empty for xla).  ``n_source_dispatches`` is the
+    dispatch count of the *unfused* source program — the eager baseline
+    the fusion win is measured against.
+    """
+
+    graph: Graph
+    plans: Dict[int, ExecutionPlan]
+    backend: str
+    signature: str
+    modeled_s: float
+    n_source_dispatches: int
+    interpret: Optional[bool] = None
+    generation: int = -1       # autotune.cache_generation() at compile
+
+    @property
+    def n_dispatches(self) -> int:
+        return self.graph.n_dispatches
+
+    def describe(self) -> str:
+        head = (f"program[{self.signature}] {self.n_dispatches} dispatches "
+                f"(eager {self.n_source_dispatches}), "
+                f"~{self.modeled_s * 1e6:.2f}us modeled")
+        return head + "\n" + self.graph.describe()
+
+    def __call__(self, *args):
+        g = self.graph
+        if len(args) != len(g.inputs):
+            raise ValueError(f"program takes {len(g.inputs)} inputs, "
+                             f"got {len(args)}")
+        env: Dict[int, object] = dict(zip(g.inputs, args))
+        for idx, node in enumerate(g.nodes):
+            if isinstance(node, GemmNode):
+                env[node.out] = self._run_gemm(node, env,
+                                               self.plans.get(idx))
+            elif isinstance(node, GroupNode):
+                for vid, val in zip(node.outputs,
+                                    self._run_group(node, env,
+                                                    self.plans.get(idx))):
+                    env[vid] = val
+            elif isinstance(node, CastNode):
+                env[node.out] = _apply_cast(env[node.x], node.fmt)
+            else:
+                env[node.out] = _run_epilogue(node, env)
+        outs = tuple(env[v] for v in g.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    # -- node execution -------------------------------------------------------
+    def _run_gemm(self, node: GemmNode, env, plan):
+        fmt = formats_lib.FORMATS[node.fmt]
+        a, b = env[node.a], env[node.b]
+        c = env[node.c] if node.c is not None else None
+        bias = env[node.bias] if node.bias is not None else None
+        out_dtype = jnp.dtype(node.out_dtype)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return ops.mte_gemm(
+                a, b, c=c, bias=bias, epilogue=node.epilogue,
+                policy=node.policy, out_dtype=out_dtype, format_policy=fmt,
+                interpret=self.interpret,
+                geometry=plan.geometry if plan is not None else None)
+        acc = formats_lib.xla_gemm(a, b, fmt)
+        out = node.epilogue.apply(acc.astype(jnp.float32)
+                                  if fmt.quantized else acc,
+                                  c_in=c, bias=bias)
+        return out.astype(out_dtype)
+
+    def _run_group(self, node: GroupNode, env, plan):
+        fmt = formats_lib.FORMATS[node.fmt]
+        x = env[node.a]
+        geom = plan.geometry if plan is not None else None
+        kernel_dt = jnp.dtype(_group_kernel_out_dtype(node, fmt))
+        out_dtype = jnp.dtype(node.out_dtype)
+        biases = tuple(env[b] if b is not None else None
+                       for b in node.biases) or (None,) * node.group
+        if node.stacked is None and self.backend == "pallas":
+            # Member-wise operand handling + member epilogues inside ONE
+            # custom VJP: quantized formats keep their own per-member
+            # scales (stacking *then* quantizing would blur per-tensor
+            # scales across members — member-wise is bit-identical to G
+            # eager GEMMs), float formats apply epilogues at accumulator
+            # precision, and the backward — the unfused jnp reference —
+            # recomputes the accumulators at full precision and runs the
+            # epilogue vjps there: exactly the straight-through contract
+            # of kernels/autodiff.py, for every format.
+            ws = tuple(env[w] for w in node.weights)
+            members = _group_member_gemm(x, ws, biases, node.widths,
+                                         node.fmt, node.epilogues, geom,
+                                         self.interpret)
+            return [y.astype(out_dtype) for y in members]
+        if node.stacked is not None:
+            wstack = env[node.stacked]
+        else:
+            wstack = stack_group_weights([env[w] for w in node.weights])
+        members = _grouped_launch(x, wstack, node.widths, fmt, kernel_dt,
+                                  geom, self.backend, self.interpret)
+        outs = []
+        for i, y in enumerate(members):
+            epi = node.epilogues[i]
+            if not epi.is_identity:
+                if fmt.quantized:
+                    y = y.astype(jnp.float32)
+                y = epi.apply(y, bias=biases[i])
+            outs.append(y.astype(out_dtype))
+        return outs
+
+
+def _grouped_launch(x, wstack, widths, fmt, kernel_dt, geom, backend,
+                    interpret):
+    """One grouped kernel launch over the stacked operand; returns the
+    per-member slices (padded columns dropped) at the kernel dtype."""
+    g = wstack.shape[-3]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (g,) + x.shape)
+    if backend == "pallas":
+        from repro.kernels import ops
+        out = ops.grouped_gemm(x, wstack, epilogue=Epilogue(),
+                               out_dtype=kernel_dt, format_policy=fmt,
+                               interpret=interpret, geometry=geom)
+    else:
+        acc = formats_lib.xla_grouped(x, wstack, fmt)
+        out = (acc.astype(jnp.float32) if fmt.quantized else acc
+               ).astype(kernel_dt)
+    return [out[i, :, :w] for i, w in enumerate(widths)]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _group_member_gemm(x, ws, biases, widths, fmt_name: str, epilogues,
+                       geom, interpret):
+    """Member-wise grouped GEMM → tuple of members with their epilogues
+    applied at accumulator precision.
+
+    Forward, quantized formats: quantize x once and each member weight
+    with its own scales (bit-identical to G eager quantized GEMMs — int
+    accumulation is exact and stacking *after* quantization keeps
+    per-member/per-tensor scales intact), stack the int8 weights, launch
+    ONE grouped kernel, dequantize and apply each member's epilogue at
+    f32.  Float formats: cast to the operand width, stack, one launch at
+    the accumulator dtype, member epilogues there.
+
+    Backward (all formats): the straight-through contract of
+    ``kernels/autodiff.py`` — recompute the accumulators at full
+    precision, run the epilogue vjps there, and form the operand grads
+    with the unfused jnp reference (operand casts/quantization are
+    treated as identity, exactly like the eager per-projection STE)."""
+    from repro.kernels import ops
+    fmt = formats_lib.FORMATS[fmt_name]
+    if fmt.quantized:
+        xq, sa = formats_lib.quantize(x, contract_axis=x.ndim - 1,
+                                      per_channel=fmt.per_channel)
+        qs = [formats_lib.quantize(w, contract_axis=0,
+                                   per_channel=fmt.per_channel)
+              for w in ws]
+        wstack = stack_group_weights([q for q, _ in qs])
+        xg = jnp.broadcast_to(xq[None], (len(ws),) + xq.shape)
+        acc = ops.grouped_gemm(xg, wstack, epilogue=Epilogue(),
+                               out_dtype=jnp.float32, format_policy=fmt,
+                               interpret=interpret, geometry=geom)
+        outs = []
+        for i, (_, sb) in enumerate(qs):
+            o = acc[i, :, : widths[i]]
+            # Same dequant order as formats.dequantize: ·s_a then ·s_b.
+            if sa is not None:
+                o = o * sa
+            if sb is not None:
+                o = o * sb
+            outs.append(epilogues[i].apply(o, bias=biases[i]))
+        return tuple(outs)
+    xc = x.astype(fmt.operand_jnp)
+    wstack = stack_group_weights([w.astype(fmt.operand_jnp) for w in ws])
+    xg = jnp.broadcast_to(xc[None], (len(ws),) + xc.shape)
+    acc = ops.grouped_gemm(xg, wstack, epilogue=Epilogue(),
+                           out_dtype=fmt.accum_jnp, format_policy=fmt,
+                           interpret=interpret, geometry=geom)
+    return tuple(
+        epilogues[i].apply(acc[i, :, : widths[i]], bias=biases[i])
+        for i in range(len(ws)))
+
+
+def _group_member_fwd(x, ws, biases, widths, fmt_name, epilogues, geom,
+                      interpret):
+    out = _group_member_gemm(x, ws, biases, widths, fmt_name, epilogues,
+                             geom, interpret)
+    return out, (x, ws, biases)
+
+
+def _group_member_bwd(widths, fmt_name, epilogues, geom, interpret, res,
+                      gs):
+    x, ws, biases = res
+    xf = x.astype(jnp.float32)
+    dx = jnp.zeros_like(xf)
+    dws, dbs = [], []
+    for gi, w, bias, epi in zip(gs, ws, biases, epilogues):
+        wf = w.astype(jnp.float32)
+        acc = jnp.dot(xf, wf)          # full-precision recompute (STE)
+        if bias is None:
+            _, vjp = jax.vjp(lambda a: epi.apply(a), acc)
+            (dacc,) = vjp(gi.astype(jnp.float32))
+            dbs.append(None)
+        else:
+            _, vjp = jax.vjp(lambda a, b_: epi.apply(a, bias=b_), acc,
+                             bias)
+            dacc, db = vjp(gi.astype(jnp.float32))
+            dbs.append(db.astype(bias.dtype))
+        dx = dx + jnp.dot(dacc, wf.T)
+        dws.append(jnp.dot(xf.T, dacc).astype(w.dtype))
+    return dx.astype(x.dtype), tuple(dws), tuple(dbs)
+
+
+_group_member_gemm.defvjp(_group_member_fwd, _group_member_bwd)
+
+
+def _apply_cast(x, fmt_name: str):
+    """Materialize ``x`` on the policy's operand grid.  Float policies
+    cast; quantized policies fake-quantize (per-row scales over the last
+    axis) back to f32 — the producer-side dequantized view a consumer
+    GEMM under the same policy re-quantizes exactly."""
+    fmt = formats_lib.FORMATS[fmt_name]
+    if not fmt.quantized:
+        return x.astype(fmt.operand_jnp)
+    q, s = formats_lib.quantize(x, contract_axis=x.ndim - 1,
+                                per_channel=fmt.per_channel)
+    if s is None:
+        return x
+    return q.astype(jnp.float32) * s
+
+
+def _run_epilogue(node: EpilogueNode, env):
+    args = [env[a] for a in node.args]
+    if node.op == "mul":
+        out = args[0] * args[1]
+    elif node.op == "add":
+        out = args[0] + args[1]
+    else:
+        rest = list(args[1:])
+        c = rest.pop(0) if node.spec.needs_c_input else None
+        bias = rest.pop(0) if node.spec.has_bias else None
+        out = node.spec.apply(args[0], c_in=c, bias=bias)
+    return out.astype(jnp.dtype(node.out_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Compilation + memoization
+# ---------------------------------------------------------------------------
+
+from collections import OrderedDict
+
+# Both memos are LRU-bounded (mirroring the plan cache) and purged of
+# generation-stale entries on every cold compile — a long-lived process
+# cycling through shapes (bucketed training lengths, varying batch) must
+# not accumulate programs forever.
+_MAX_PROGRAMS = 1024
+_PROGRAMS: "OrderedDict[object, CompiledProgram]" = OrderedDict()
+_KEYED: "OrderedDict[object, CompiledProgram]" = OrderedDict()
+_STATS = {"compiles": 0, "hits": 0}
+
+
+def _remember(store: OrderedDict, key, prog: CompiledProgram) -> None:
+    store[key] = prog
+    store.move_to_end(key)
+    while len(store) > _MAX_PROGRAMS:
+        store.popitem(last=False)
+
+
+def _purge_stale() -> None:
+    gen = autotune.cache_generation()
+    for store in (_PROGRAMS, _KEYED):
+        for k in [k for k, p in store.items() if p.generation != gen]:
+            del store[k]
+
+
+def reset_programs() -> None:
+    _PROGRAMS.clear()
+    _KEYED.clear()
+    _STATS.update(compiles=0, hits=0)
+
+
+def program_stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def compiled_programs() -> List[CompiledProgram]:
+    """The current-generation programs compiled so far (benchmarks /
+    examples introspect these for dispatch counts and modeled times)."""
+    gen = autotune.cache_generation()
+    return [p for p in _PROGRAMS.values() if p.generation == gen]
+
+
+def compile_graph(graph: Graph, *, backend: str = "pallas",
+                  fuse: bool = True,
+                  interpret: Optional[bool] = None) -> CompiledProgram:
+    """Fuse, score, schedule and memoize one program.
+
+    The grouped and ungrouped fusions are scored with the perf model and
+    the cheaper program wins; the winner's kernel plans are granted by
+    the process-global plan cache (→ JSON persistence) and then
+    tile-stabilized.  Memoized per ``(graph signature, backend)``.
+    """
+    key = (graph.signature(), backend, interpret)
+    hit = _PROGRAMS.get(key)
+    if hit is not None and hit.generation == autotune.cache_generation():
+        _STATS["hits"] += 1
+        return hit
+    # A reset plan cache invalidates memoized programs: their plans were
+    # granted by (and persisted through) the old cache, and callers that
+    # audit/warm-start the new cache must see the grants re-requested.
+    _purge_stale()
+    _STATS["compiles"] += 1
+    source_dispatches = graph.n_dispatches
+
+    chosen = graph
+    if fuse:
+        base = fuse_mod.fuse(graph, rules=(fuse_mod.absorb_epilogues,
+                                           fuse_mod.eliminate_casts))
+        grouped = fuse_mod.fuse(base, rules=(fuse_mod.group_siblings,))
+        chosen = base
+        if grouped is not base and backend == "pallas":
+            gcache = autotune.plan_cache()
+            # Score in a scratch cache seeded from the global one: warm /
+            # already-granted plans are reused instead of re-solved, and
+            # the losing candidate's plans never pollute the global cache
+            # (signature audits and JSON persistence see only the winner).
+            scratch = PlanCache(profile=gcache.profile,
+                                n_cores=gcache.n_cores)
+            scratch._plans.update(gcache._plans)
+            # <= : at equal modeled cost the fewer-launch program wins.
+            if (_program_time(grouped, scratch)
+                    <= _program_time(base, scratch)):
+                chosen = grouped
+        elif grouped is not base:
+            chosen = grouped  # xla: one fused einsum is never worse
+
+    plans: Dict[int, ExecutionPlan] = {}
+    modeled = 0.0
+    if backend == "pallas":
+        gcache = autotune.plan_cache()
+        for idx in chosen.kernel_nodes():
+            plans[idx] = gcache.plan(
+                _node_signature(chosen, chosen.nodes[idx]))
+        plans = _stabilize_tiles(chosen, plans, gcache.profile,
+                                 gcache.n_cores)
+        modeled = _program_time(chosen, plans=plans,
+                                profile=gcache.profile)
+
+    prog = CompiledProgram(graph=chosen, plans=plans, backend=backend,
+                           signature=graph.signature(), modeled_s=modeled,
+                           n_source_dispatches=source_dispatches,
+                           interpret=interpret,
+                           generation=autotune.cache_generation())
+    _remember(_PROGRAMS, key, prog)
+    return prog
+
+
+def compile_cached(key, build: Callable[[], Graph], *,
+                   backend: str = "pallas", fuse: bool = True,
+                   interpret: Optional[bool] = None) -> CompiledProgram:
+    """Memoized compile that skips graph *construction* on a hit — the
+    hot-path entry the model layers use (``key`` encodes everything the
+    built graph depends on: shapes, dtypes, format, policy, backend)."""
+    full_key = (key, backend, interpret)
+    prog = _KEYED.get(full_key)
+    if prog is None or prog.generation != autotune.cache_generation():
+        prog = compile_graph(build(), backend=backend, fuse=fuse,
+                             interpret=interpret)
+        _remember(_KEYED, full_key, prog)
+    else:
+        _STATS["hits"] += 1
+    return prog

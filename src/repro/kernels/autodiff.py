@@ -40,9 +40,19 @@ from repro.core.epilogue import Epilogue
 __all__ = ["mte_gemm_ad", "grouped_gemm_ad", "flash_attention_ad"]
 
 
-def _plan(m, n, k, dt_in, dt_out, policy, epilogue=None, group=1, fmt=None):
-    """Fetch (or solve+memoize) the execution plan from the global cache."""
+def _plan(m, n, k, dt_in, dt_out, policy, epilogue=None, group=1, fmt=None,
+          geometry=None):
+    """Fetch (or solve+memoize) the execution plan from the global cache.
+
+    A non-None ``geometry`` pins the plan to that block geometry instead
+    (the program-level scheduling override of :mod:`repro.graph.schedule`)
+    — no cache lookup or insertion happens for pinned plans.
+    """
     from repro.core import autotune
+    if geometry is not None:
+        return autotune.plan_with_geometry(
+            m, n, k, dt_in, dt_out, epilogue=epilogue, policy=policy,
+            group=group, fmt=fmt, geometry=geometry)
     return autotune.get_plan(m, n, k, dt_in, dt_out, epilogue=epilogue,
                              policy=policy, backend="pallas", group=group,
                              fmt=fmt)
@@ -71,14 +81,17 @@ def _raw_gemm(a, b, policy, interpret, out_dtype=jnp.float32):
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
 def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
                 out_dtype, interpret: bool, has_c: bool, has_bias: bool,
-                fmt: str = "fp32"):
+                fmt: str = "fp32", geometry=None):
     """Differentiable fused GEMM routed through the autotune plan cache.
     c/bias are zero-size placeholders when unused (custom_vjp needs a
     static pytree structure).  ``fmt`` names the FormatPolicy the forward
-    executes under (the backward ignores it — see module docstring)."""
+    executes under (the backward ignores it — see module docstring).
+    ``geometry`` pins the forward to a program-scheduled block geometry
+    (repro.graph) instead of the cached per-GEMM grant; the backward
+    GEMMs still plan themselves."""
     from repro.core.formats import FORMATS, dequantize, quantize_operands
     fp = FORMATS[fmt]
     m, k = a.shape
@@ -90,7 +103,7 @@ def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
         # identity epilogue so every outer epilogue shares one plan.
         aq, bq, sa, sb = quantize_operands(a, b, fp)
         plan = _plan(m, n, k, aq.dtype, jnp.int32, policy,
-                     epilogue=Epilogue(), fmt=fmt)
+                     epilogue=Epilogue(), fmt=fmt, geometry=geometry)
         acc = _run_plan(plan, aq, bq, None, None, interpret)
         acc = dequantize(acc, sa, sb)
         out = epilogue.apply(acc.astype(jnp.float32),
@@ -100,21 +113,21 @@ def mte_gemm_ad(a, b, c, bias, epilogue: Epilogue, policy: str,
     ac = a.astype(fp.operand_jnp)
     bc = b.astype(fp.operand_jnp)
     plan = _plan(m, n, k, ac.dtype, out_dtype, policy, epilogue=epilogue,
-                 fmt=fmt)
+                 fmt=fmt, geometry=geometry)
     return _run_plan(plan, ac, bc,
                      c if has_c else None,
                      bias if has_bias else None, interpret)
 
 
 def _gemm_fwd(a, b, c, bias, epilogue, policy, out_dtype, interpret,
-              has_c, has_bias, fmt):
+              has_c, has_bias, fmt, geometry):
     out = mte_gemm_ad(a, b, c, bias, epilogue, policy, out_dtype,
-                      interpret, has_c, has_bias, fmt)
+                      interpret, has_c, has_bias, fmt, geometry)
     return out, (a, b, c, bias)
 
 
 def _gemm_bwd(epilogue, policy, out_dtype, interpret, has_c, has_bias,
-              fmt, res, g):
+              fmt, geometry, res, g):
     # `fmt` is deliberately unused: the backward runs on the
     # full-precision residuals (straight-through estimator).  Residuals
     # may hold mixed dtypes (bf16 activations x f32 params) since the
@@ -148,9 +161,9 @@ mte_gemm_ad.defvjp(_gemm_fwd, _gemm_bwd)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool,
-                    fmt: str = "fp32"):
+                    fmt: str = "fp32", geometry=None):
     from repro.core.formats import FORMATS, dequantize, quantize_operands
     from repro.kernels.grouped_gemm import grouped_gemm_pallas
     fp = FORMATS[fmt]
@@ -158,9 +171,10 @@ def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool,
     n = w.shape[2]
     if fp.quantized:
         xq, wq, sx, sw = quantize_operands(x, w, fp)
-        plan = _plan(cap, n, k, xq.dtype, jnp.int32, "mte",
-                     epilogue=Epilogue(), group=g, fmt=fmt)
-        acc = grouped_gemm_pallas(xq, wq, geom=plan.geometry,
+        geom = geometry if geometry is not None else _plan(
+            cap, n, k, xq.dtype, jnp.int32, "mte",
+            epilogue=Epilogue(), group=g, fmt=fmt).geometry
+        acc = grouped_gemm_pallas(xq, wq, geom=geom,
                                   epilogue=Epilogue(),
                                   out_dtype=jnp.int32,
                                   acc_dtype=jnp.int32, interpret=interpret)
@@ -169,18 +183,20 @@ def grouped_gemm_ad(x, w, epilogue: Epilogue, out_dtype, interpret: bool,
         return out.astype(out_dtype)
     xc = x.astype(fp.operand_jnp)
     wc = w.astype(fp.operand_jnp)
-    plan = _plan(cap, n, k, xc.dtype, out_dtype, "mte", epilogue=epilogue,
-                 group=g, fmt=fmt)
-    return grouped_gemm_pallas(xc, wc, geom=plan.geometry, epilogue=epilogue,
+    geom = geometry if geometry is not None else _plan(
+        cap, n, k, xc.dtype, out_dtype, "mte", epilogue=epilogue,
+        group=g, fmt=fmt).geometry
+    return grouped_gemm_pallas(xc, wc, geom=geom, epilogue=epilogue,
                                out_dtype=out_dtype,
                                acc_dtype=fp.accum_jnp, interpret=interpret)
 
 
-def _grouped_fwd(x, w, epilogue, out_dtype, interpret, fmt):
-    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt), (x, w)
+def _grouped_fwd(x, w, epilogue, out_dtype, interpret, fmt, geometry):
+    return (grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt,
+                            geometry), (x, w))
 
 
-def _grouped_bwd(epilogue, out_dtype, interpret, fmt, res, g):
+def _grouped_bwd(epilogue, out_dtype, interpret, fmt, geometry, res, g):
     # STE: full-precision backward regardless of the forward format;
     # mixed-dtype residuals run in the promoted common dtype.
     from repro.kernels.grouped_gemm import grouped_gemm_pallas

@@ -36,15 +36,25 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
     return (not on_tpu()) if interpret is None else interpret
 
 
+def _trace_sink():
+    """The active repro.graph capture, if any (None in the common case)."""
+    from repro.graph import trace
+    return trace.active()
+
+
 def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
              policy: str = "mte", out_dtype=jnp.float32,
-             format_policy=None, interpret: Optional[bool] = None):
+             format_policy=None, interpret: Optional[bool] = None,
+             geometry=None):
     """Geometry-agnostic GEMM through the autotune plan cache.
 
     ``policy='amx'`` routes to the rigid baseline; tall/skinny shapes
     whose planned geometry carries ``split_k > 1`` route to the split-K
     kernel.  ``format_policy`` sets the data format (fp32 / bf16 /
     bf16acc / int8-with-scales; None infers from ``a.dtype``).
+    ``geometry`` (a BlockGeometry) pins the launch to a program-scheduled
+    block shape (repro.graph compiled programs) instead of the cached
+    per-GEMM grant.
     Differentiable: backward runs as two more plan-cached MTE GEMMs plus
     the epilogue's jnp vjp on the full-precision residuals — the
     straight-through estimator for the quantized formats
@@ -62,30 +72,51 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
                                     interpret=interpret)
             acc = formats_lib.dequantize(acc, sa, sb)
             out = epilogue.apply(acc.astype(jnp.float32), c_in=c, bias=bias)
-            return out.astype(out_dtype)
-        ac = a.astype(fmt.operand_jnp)
-        bc = b.astype(fmt.operand_jnp)
-        return rigid_gemm_pallas(ac, bc, c=c, bias=bias, epilogue=epilogue,
-                                 out_dtype=out_dtype, interpret=interpret)
+            out = out.astype(out_dtype)
+        else:
+            ac = a.astype(fmt.operand_jnp)
+            bc = b.astype(fmt.operand_jnp)
+            out = rigid_gemm_pallas(ac, bc, c=c, bias=bias,
+                                    epilogue=epilogue,
+                                    out_dtype=out_dtype, interpret=interpret)
+        sink = _trace_sink()
+        if sink is not None:
+            sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
+                             fmt=fmt.name, policy=policy,
+                             out_dtype=out_dtype, backend="pallas")
+        return out
     m, k = a.shape
     n = b.shape[1]
     has_c, has_bias = c is not None, bias is not None
     c_ = c if has_c else jnp.zeros((m, n), jnp.float32)
     bias_ = bias if has_bias else jnp.zeros((n,), jnp.float32)
-    return mte_gemm_ad(a, b, c_, bias_, epilogue, policy, out_dtype,
-                       interpret, has_c, has_bias, fmt.name)
+    out = mte_gemm_ad(a, b, c_, bias_, epilogue, policy, out_dtype,
+                      interpret, has_c, has_bias, fmt.name, geometry)
+    sink = _trace_sink()
+    if sink is not None:
+        sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
+                         fmt=fmt.name, policy=policy, out_dtype=out_dtype,
+                         backend="pallas")
+    return out
 
 
 def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
                  out_dtype=jnp.float32, format_policy=None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, geometry=None):
     """Per-expert GEMM: x (G, C, K) @ w (G, K, N) -> (G, C, N).
     ``format_policy`` as in :func:`mte_gemm` (per-group per-channel
-    scales for int8).  Differentiable (kernels/autodiff.py)."""
+    scales for int8); ``geometry`` pins a program-scheduled block shape.
+    Differentiable (kernels/autodiff.py)."""
     from repro.kernels.autodiff import grouped_gemm_ad
     interpret = _default_interpret(interpret)
     fmt = formats_lib.resolve_format(format_policy, x.dtype)
-    return grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt.name)
+    out = grouped_gemm_ad(x, w, epilogue, out_dtype, interpret, fmt.name,
+                          geometry)
+    sink = _trace_sink()
+    if sink is not None:
+        sink.record_grouped(x, w, out, epilogue=epilogue, fmt=fmt.name,
+                            out_dtype=out_dtype, backend="pallas")
+    return out
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -42,11 +42,18 @@ def main():
                     help="admission cap on committed in-flight tokens")
     ap.add_argument("--plan-cache", default=None,
                     help="GEMM plan-cache JSON to warm-start from / save to")
+    ap.add_argument("--no-graph", action="store_true",
+                    help="eager per-GEMM dispatch instead of compiled "
+                         "repro.graph programs (debugging escape hatch; "
+                         "compiled is the default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.no_graph:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, use_graph=False)
 
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,

@@ -134,6 +134,10 @@ def main():
                     choices=[None, "xla", "pallas"])
     ap.add_argument("--format-policy", default=None,
                     choices=[None, "fp32", "bf16", "bf16acc", "int8"])
+    ap.add_argument("--no-graph", action="store_true",
+                    help="eager per-GEMM dispatch instead of compiled "
+                         "repro.graph programs (debugging escape hatch; "
+                         "compiled is the default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -143,6 +147,8 @@ def main():
         cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
     if args.format_policy:
         cfg = dataclasses.replace(cfg, format_policy=args.format_policy)
+    if args.no_graph:
+        cfg = dataclasses.replace(cfg, use_graph=False)
 
     def run(attempt: int):
         train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,

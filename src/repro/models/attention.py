@@ -18,11 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (dense, init_dense, init_norm, model_format,
-                                 rmsnorm, rope)
+                                 rmsnorm, rope, use_graph)
 
 __all__ = ["init_attention", "attention", "init_attn_cache",
            "decode_attention", "init_paged_attn_cache",
-           "paged_decode_attention", "quantize_kv", "stack_qkv_weights"]
+           "paged_decode_attention", "quantize_kv"]
 
 _NEG_INF = -1e30
 
@@ -47,9 +47,15 @@ def init_attention(key, cfg):
 def _project_qkv(x, p, cfg, positions):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = dense(x, p["q"], cfg).reshape(b, s, cfg.n_heads, hd)
-    k = dense(x, p["k"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
-    v = dense(x, p["v"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
+    if use_graph(cfg):
+        q2, k2, v2 = _qkv_compiled(x.reshape(b * s, -1), p, cfg)
+        q = q2.reshape(b, s, cfg.n_heads, hd)
+        k = k2.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v2.reshape(b, s, cfg.n_kv_heads, hd)
+    else:
+        q = dense(x, p["q"], cfg).reshape(b, s, cfg.n_heads, hd)
+        k = dense(x, p["k"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
+        v = dense(x, p["v"], cfg).reshape(b, s, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -58,22 +64,75 @@ def _project_qkv(x, p, cfg, positions):
     return q, k, v
 
 
+def _qkv_compiled(x2, p, cfg):
+    """The q/k/v projections as ONE compiled ``repro.graph`` program.
+
+    Three GemmNodes sharing the input: the sibling-grouping rewrite turns
+    them into a single GroupNode — one grouped kernel launch and one
+    plan-cache signature per step instead of three — when the scheduler's
+    program score favors it (it models the k/v zero-padding waste and the
+    per-call weight-stacking traffic, so grouping is a measured choice,
+    not a reflex).  Each node carries the same epilogue ``dense`` would
+    fuse (QKV bias), so parity with the eager path holds per format.
+    """
+    import jax.numpy as jnp
+    from repro.core.epilogue import Epilogue
+    from repro.graph import schedule as graph_schedule
+    from repro.graph.trace import GraphBuilder
+    from repro.models.layers import _cdt
+
+    cdt = _cdt(cfg)
+    fmt = model_format(cfg)
+    m, d = x2.shape
+
+    def build():
+        b = GraphBuilder()
+        xv = b.input((m, d), x2.dtype, "x")
+        outs = []
+        for name in ("q", "k", "v"):
+            wv = b.input(p[name]["w"].shape, p[name]["w"].dtype,
+                         f"w_{name}")
+            bv = (b.input((p[name]["w"].shape[1],), "float32",
+                          f"b_{name}") if cfg.qkv_bias else None)
+            outs.append(b.gemm(
+                xv, wv, bias=bv,
+                epilogue=Epilogue(has_bias=cfg.qkv_bias),
+                fmt=fmt.name, out_dtype=cdt, policy=cfg.gemm_policy,
+                name=name))
+        b.output(*outs)
+        return b.build()
+
+    key = ("qkv", m, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, fmt.name,
+           str(cdt), cfg.gemm_policy, cfg.qkv_bias, str(x2.dtype),
+           str(p["q"]["w"].dtype))
+    prog = graph_schedule.compile_cached(key, build)
+    args = [x2]
+    for name in ("q", "k", "v"):
+        args.append(p[name]["w"])
+        if cfg.qkv_bias:
+            args.append(p[name]["b"].astype(jnp.float32))
+    return prog(*args)
+
+
 def _project_qkv_grouped(x, p, cfg, positions):
-    """Decode q/k/v as ONE grouped GEMM (G=3) through the plan cache.
+    """Decode q/k/v as ONE GroupNode program (G=3) through the plan cache.
 
     A decode step's three projection GEMVs share M=B and K=d_model and
-    differ only in N; batching them as a grouped launch means the plan
-    cache sees a single grouped signature per step instead of three GEMV
-    signatures (and the grouped kernel's group-grid parallelism covers
-    the underfilled (M, N) grid the GEMVs leave).  k/v columns are
-    zero-padded up to q's width and sliced back off the output.
+    differ only in N; the compiled program's GroupNode batches them as a
+    single grouped launch, so the plan cache sees one grouped signature
+    per step instead of three GEMV signatures (and the grouped kernel's
+    group-grid parallelism covers the underfilled (M, N) grid the GEMVs
+    leave).  k/v columns are zero-padded up to q's width and sliced back
+    off by the GroupNode.
 
-    The stacked (3, D, Nmax) weight is pure layout: the serving engine
-    precomputes it once per layer (:func:`stack_qkv_weights`, stored as
-    ``p["qkv"]``) so the hot decode step never re-pads; the inline stack
-    below is the fallback for direct ``model.decode`` calls.
+    The stacked (3, D, Nmax) weight is pure layout
+    (:func:`repro.graph.stack_group_weights`): the serving engine
+    precomputes it once per layer (stored as ``p["qkv"]``) so the hot
+    decode step never re-pads; the inline stack below is the fallback for
+    direct ``model.decode`` calls.
     """
-    from repro.kernels import ops
+    from repro.graph import schedule as graph_schedule, stack_group_weights
+    from repro.graph.trace import GraphBuilder
     b, s, dm = x.shape
     hd = cfg.hd
     nq = cfg.n_heads * hd
@@ -81,14 +140,26 @@ def _project_qkv_grouped(x, p, cfg, positions):
 
     wstack = p.get("qkv")
     if wstack is None:
-        wstack = stack_qkv_weights(p["q"]["w"], p["k"]["w"],
-                                   p["v"]["w"])           # (3, D, Nmax)
+        wstack = stack_group_weights([p["q"]["w"], p["k"]["w"],
+                                      p["v"]["w"]])       # (3, D, Nmax)
     x2 = x.reshape(b * s, dm)
-    xg = jnp.broadcast_to(x2[None], (3, b * s, dm))
     cdt = jnp.dtype(cfg.compute_dtype)
-    out = ops.grouped_gemm(xg, wstack, out_dtype=cdt,
-                           format_policy=model_format(cfg))  # (3, B·S, Nmax)
-    q, k, v = out[0, :, :nq], out[1, :, :nkv], out[2, :, :nkv]
+    fmt = model_format(cfg)
+
+    def build():
+        bld = GraphBuilder()
+        xv = bld.input((b * s, dm), x2.dtype, "x")
+        wv = bld.input(wstack.shape, wstack.dtype, "qkv")
+        outs = bld.group(xv, stacked=wv, widths=(nq, nkv, nkv),
+                         fmt=fmt.name, out_dtype=cdt,
+                         policy=cfg.gemm_policy)
+        bld.output(*outs)
+        return bld.build()
+
+    key = ("qkv_decode", b * s, dm, nq, nkv, fmt.name, str(cdt),
+           cfg.gemm_policy, str(x2.dtype), str(wstack.dtype))
+    prog = graph_schedule.compile_cached(key, build)
+    q, k, v = prog(x2, wstack)
     if cfg.qkv_bias:
         q = q + p["q"]["b"].astype(q.dtype)
         k = k + p["k"]["b"].astype(k.dtype)
@@ -104,22 +175,12 @@ def _project_qkv_grouped(x, p, cfg, positions):
     return q, k, v
 
 
-def stack_qkv_weights(wq, wk, wv):
-    """Stack q/k/v projection weights (…, D, N) into the grouped-GEMM
-    layout (…, 3, D, Nmax), zero-padding narrower outputs.  Leading axes
-    (the scanned group dimension) pass through."""
-    nmax = max(wq.shape[-1], wk.shape[-1])
-
-    def padw(w):
-        pad = [(0, 0)] * w.ndim
-        pad[-1] = (0, nmax - w.shape[-1])
-        return jnp.pad(w, pad)
-
-    return jnp.stack([padw(wq), padw(wk), padw(wv)], axis=-3)
-
-
 def _project_qkv_decode(x, p, cfg, positions):
-    if getattr(cfg, "decode_qkv_grouped", False):
+    # The grouped decode projection IS a compiled graph program, so the
+    # --no-graph escape hatch (use_graph=False) disables it too — eager
+    # per-GEMM dispatch must stay reachable on the serving hot path.
+    if (getattr(cfg, "decode_qkv_grouped", False)
+            and getattr(cfg, "use_graph", True)):
         return _project_qkv_grouped(x, p, cfg, positions)
     return _project_qkv(x, p, cfg, positions)
 

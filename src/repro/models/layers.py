@@ -23,7 +23,7 @@ from repro.core import formats as formats_lib
 
 __all__ = ["dense", "rmsnorm", "layernorm", "norm", "init_norm", "rope",
            "init_dense", "mlp", "init_mlp", "init_embedding", "embed",
-           "unembed", "ffn_param_specs", "model_format"]
+           "unembed", "ffn_param_specs", "model_format", "use_graph"]
 
 
 def _cdt(cfg):
@@ -36,6 +36,15 @@ def model_format(cfg) -> formats_lib.FormatPolicy:
     historical per-call-site ``astype(compute_dtype)`` behaviour)."""
     return formats_lib.resolve_format(
         getattr(cfg, "format_policy", None), _cdt(cfg))
+
+
+def use_graph(cfg) -> bool:
+    """True when layer pipelines should execute as compiled
+    ``repro.graph`` programs.  The graph path targets the kernel-backed
+    backend (its scheduling decisions are plan-cache grants); the XLA
+    backend keeps eager jnp dispatch, whose fusion XLA already owns."""
+    return (bool(getattr(cfg, "use_graph", False))
+            and cfg.gemm_backend == "pallas")
 
 
 def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
@@ -147,6 +156,8 @@ def init_mlp(key, cfg):
 
 
 def mlp(x, p, cfg):
+    if use_graph(cfg):
+        return _mlp_compiled(x, p, cfg)
     if cfg.mlp_type == "swiglu":
         g = dense(x, p["gate"], cfg, activation="silu")
         u = dense(x, p["up"], cfg)
@@ -157,6 +168,61 @@ def mlp(x, p, cfg):
         return dense(g * u, p["down"], cfg)
     h = dense(x, p["up"], cfg, activation="gelu")
     return dense(h, p["down"], cfg)
+
+
+def _mlp_compiled(x, p, cfg):
+    """The MLP block as ONE compiled ``repro.graph`` program.
+
+    Same math as the eager path (each projection = a GemmNode carrying
+    the dense epilogue), but fused/scheduled at program level: the
+    gate+up siblings of a gated MLP share the input and become one
+    grouped launch when the perf model says grouping pays, so the block
+    issues fewer kernel dispatches / plan-cache signatures than eager.
+    Compiled programs are memoized per (shape, format, type) — repeat
+    calls skip graph construction entirely.
+    """
+    from repro.graph import schedule as graph_schedule
+    from repro.graph.trace import GraphBuilder
+
+    cdt = _cdt(cfg)
+    fmt = model_format(cfg)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, d = x2.shape
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
+    names = ("gate", "up", "down") if gated else ("up", "down")
+    biased = tuple(n for n in names if "b" in p[n])
+
+    def build():
+        b = GraphBuilder()
+        xv = b.input((m, d), x2.dtype, "x")
+        wv = {n: b.input(p[n]["w"].shape, p[n]["w"].dtype, f"w_{n}")
+              for n in names}
+        bv = {n: b.input((p[n]["w"].shape[1],), "float32", f"b_{n}")
+              for n in biased}
+
+        def proj(src, n, activation="none"):
+            return b.gemm(src, wv[n], bias=bv.get(n),
+                          epilogue=Epilogue(has_bias=n in biased,
+                                            activation=activation),
+                          fmt=fmt.name, out_dtype=cdt,
+                          policy=cfg.gemm_policy, name=n)
+
+        if gated:
+            h = b.mul(proj(xv, "gate", act), proj(xv, "up"))
+        else:
+            h = proj(xv, "up", "gelu")
+        b.output(proj(h, "down"))
+        return b.build()
+
+    key = ("mlp", cfg.mlp_type, m, d, cfg.d_ff, fmt.name, str(cdt),
+           cfg.gemm_policy, biased, str(x2.dtype),
+           str(p[names[0]]["w"].dtype))
+    prog = graph_schedule.compile_cached(key, build)
+    args = [x2] + [p[n]["w"] for n in names] \
+        + [p[n]["b"].astype(jnp.float32) for n in biased]
+    return prog(*args).reshape(*lead, -1)
 
 
 def ffn_param_specs(cfg):

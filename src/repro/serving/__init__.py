@@ -27,7 +27,8 @@ Client API: ``engine.submit(Request(...)); engine.run()`` — see
 """
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import KVPagePool
-from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     DeadlineScheduler)
 
 __all__ = ["Request", "ServingEngine", "KVPagePool",
-           "ContinuousBatchingScheduler"]
+           "ContinuousBatchingScheduler", "DeadlineScheduler"]

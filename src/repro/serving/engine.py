@@ -59,19 +59,21 @@ def _stack_decode_qkv(params):
     """Precompute the grouped decode-projection layout.
 
     Every attention mixer gains a stacked (…, 3, D, Nmax) ``qkv`` weight
-    (``attention.stack_qkv_weights``) so the jitted decode reads the
+    (``repro.graph.stack_group_weights`` — the same stacking the
+    GroupNode path executes) so the jitted decode-step program reads the
     grouped operand directly instead of re-padding q/k/v on every step;
     prefill/forward ignore the extra leaf.  Returns a shallow-copied
     params tree — the caller's params are untouched.
     """
-    from repro.models.attention import stack_qkv_weights
+    from repro.graph import stack_group_weights
 
     def aug_layer(lp):
         m = lp.get("mixer")
         if not (isinstance(m, dict) and {"q", "k", "v"} <= m.keys()):
             return lp
         m = dict(m)
-        m["qkv"] = stack_qkv_weights(m["q"]["w"], m["k"]["w"], m["v"]["w"])
+        m["qkv"] = stack_group_weights([m["q"]["w"], m["k"]["w"],
+                                        m["v"]["w"]])
         lp = dict(lp)
         lp["mixer"] = m
         return lp
@@ -91,6 +93,8 @@ class Request:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     format_policy: Optional[str] = None  # per-request prefill precision
+    deadline: Optional[float] = None     # consumed by DeadlineScheduler
+    #                                      (ignored by the FIFO default)
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -104,7 +108,8 @@ class ServingEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  kv_format: Optional[str] = None,
                  token_budget: Optional[int] = None,
-                 grouped_qkv: Optional[bool] = None):
+                 grouped_qkv: Optional[bool] = None,
+                 scheduler_cls=None):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -145,7 +150,11 @@ class ServingEngine:
         self.page_size = page_size
         self._key = jax.random.PRNGKey(seed)
 
-        self.sched = ContinuousBatchingScheduler(
+        # A scheduling policy drops in by class (see ROADMAP "Serving
+        # subsystem"): e.g. scheduler_cls=DeadlineScheduler for
+        # earliest-deadline-first admission over Request.deadline.
+        scheduler_cls = scheduler_cls or ContinuousBatchingScheduler
+        self.sched = scheduler_cls(
             slots=slots, max_seq_len=cache_len, page_size=page_size,
             num_pages=num_pages, token_budget=token_budget)
         self.cache = model_lib.init_paged_cache(

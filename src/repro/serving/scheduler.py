@@ -28,7 +28,9 @@ the compiled steps; it consults this class for every scheduling decision:
 Adding a scheduling policy: subclass and override :meth:`_pick_admit`
 (which waiting request next) and/or :meth:`_pick_victim` (who to evict);
 everything else — budget accounting, pool interaction, metrics — is
-policy-agnostic.  See ROADMAP.md "Serving subsystem".
+policy-agnostic.  :class:`DeadlineScheduler` (earliest-deadline-first
+with an aging guard) is the worked example.  See ROADMAP.md "Serving
+subsystem".
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.geometry import cdiv
 from repro.serving.kv_cache import KVPagePool
 
-__all__ = ["ScheduledRequest", "ContinuousBatchingScheduler"]
+__all__ = ["ScheduledRequest", "ContinuousBatchingScheduler",
+           "DeadlineScheduler"]
 
 
 @dataclasses.dataclass
@@ -50,6 +53,9 @@ class ScheduledRequest:
     req: object               # repro.serving.engine.Request
     arrival: int
     preemptions: int = 0
+    skipped: int = 0          # admission decisions that bypassed this
+    #                           entry while it was the oldest waiting
+    #                           (DeadlineScheduler's starvation bound)
 
     @property
     def rid(self) -> int:
@@ -216,3 +222,69 @@ class ContinuousBatchingScheduler:
             "preemptions": self.preemptions,
             "completed_requests": self.completed_requests,
         }
+
+
+class DeadlineScheduler(ContinuousBatchingScheduler):
+    """Earliest-deadline-first admission on the ``_pick_admit`` /
+    ``_pick_victim`` hooks — the ROADMAP "priority / deadline" candidate,
+    and the worked example that the policy surface works.
+
+    Requests may carry a ``deadline`` (any unit; the scheduler only
+    compares values).  The waiting request with the smallest *effective*
+    deadline is admitted next; a request without a deadline gets
+    ``arrival + default_slack`` so aged best-effort traffic outranks
+    far-future deadlines.  Starvation-freedom is enforced structurally,
+    not by that heuristic: every *successful admission* that bypasses the
+    oldest-arrival waiting entry increments its ``skipped`` counter
+    (failed attempts — budget/pool full — age nothing), and once it has
+    been bypassed ``default_slack`` times it is admitted regardless of
+    deadlines (bounded-bypass EDF).  Even an endless
+    stream of urgent small-deadline requests can therefore delay the
+    oldest request only a bounded number of admissions (the fairness
+    tests assert both behaviours).  Eviction inverts the deadline key —
+    the *latest*-effective-deadline active request is preempted first,
+    so pool pressure spares the most urgent work.  Budget accounting,
+    pool interaction and metrics are inherited untouched — this class
+    overrides only the two policy hooks.
+    """
+
+    def __init__(self, *args, default_slack: int = 64, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.default_slack = default_slack
+
+    def _effective_deadline(self, entry: ScheduledRequest) -> float:
+        d = getattr(entry.req, "deadline", None)
+        return float(d) if d is not None \
+            else float(entry.arrival + self.default_slack)
+
+    def _pick_admit(self) -> ScheduledRequest:
+        """Earliest effective deadline (ties to oldest arrival), with a
+        bounded bypass of the oldest waiting entry."""
+        oldest = min(self.waiting, key=lambda e: e.arrival)
+        if oldest.skipped >= self.default_slack:
+            return oldest
+        return min(self.waiting,
+                   key=lambda e: (self._effective_deadline(e), e.arrival))
+
+    def pop_admit(self, prefill_len: int):
+        """Count a bypass only when an admission actually happened:
+        failed attempts (budget/pool full, no slot) admit nobody, so
+        they must not age the oldest entry toward force-admission."""
+        oldest = (min(self.waiting, key=lambda e: e.arrival)
+                  if self.waiting else None)
+        got = super().pop_admit(prefill_len)
+        if got is not None and oldest is not None and got[1] is not oldest:
+            oldest.skipped += 1
+        return got
+
+    def _pick_victim(self, protect: Optional[int]) -> Optional[int]:
+        """Latest effective deadline (then youngest arrival), never
+        ``protect`` unless it is the only slot left."""
+        slots = [s for s in self.active if s != protect]
+        if not slots:
+            slots = list(self.active)
+        if not slots:
+            return None
+        return max(slots, key=lambda s: (
+            self._effective_deadline(self.active[s]),
+            self.active[s].arrival))

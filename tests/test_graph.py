@@ -1,0 +1,528 @@
+"""repro.graph (ISSUE 4): GEMM-program IR — trace, fuse, schedule.
+
+Parity contract (mirrors the format tolerances documented in
+tests/test_formats.py): fused programs execute the same arithmetic as
+eager dispatch at accumulator precision, so
+
+- **int8 / int8pt** fused vs eager is *bit-exact* (integer accumulation
+  is order-independent and member-wise quantization reproduces the eager
+  scales exactly);
+- **fp32 / bf16** differ only by f32-accumulator reassociation across
+  block schedules (rtol 1e-4);
+- **bf16acc** accumulates in bf16, which does not reassociate — bounded
+  at 5% like the kernel-vs-oracle convention.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import autotune
+from repro.core.epilogue import Epilogue
+from repro.graph import GraphBuilder, compile_graph, trace_gemms
+from repro.graph import fuse as fuse_mod
+from repro.graph import ir as ir_mod
+from repro.graph import schedule as sched_mod
+from repro.kernels import ops
+from repro.models import attention as attn_mod
+from repro.models import layers as layers_mod
+
+RNG = np.random.default_rng(7)
+
+FORMATS = ("fp32", "bf16", "bf16acc", "int8", "int8pt")
+# fused-vs-eager forward tolerance per format (rtol; None = bit-exact)
+FWD_RTOL = {"fp32": 1e-4, "bf16": 1e-4, "bf16acc": 0.05,
+            "int8": None, "int8pt": None}
+
+
+@pytest.fixture(autouse=True)
+def fresh_caches():
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+    yield
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def _rel(x, want):
+    x = jnp.asarray(x, jnp.float32)
+    want = jnp.asarray(want, jnp.float32)
+    return float(jnp.max(jnp.abs(x - want)) / (1e-9 + jnp.max(jnp.abs(want))))
+
+
+# -- IR / builder -------------------------------------------------------------
+
+
+def _mlp_graph(m=8, d=64, f=128, fmt="fp32"):
+    b = GraphBuilder()
+    x = b.input((m, d), "float32", "x")
+    wg = b.input((d, f), "float32")
+    wu = b.input((d, f), "float32")
+    wd = b.input((f, d), "float32")
+    g = b.gemm(x, wg, epilogue=Epilogue(activation="silu"), fmt=fmt)
+    u = b.gemm(x, wu, fmt=fmt)
+    h = b.mul(g, u)
+    b.output(b.gemm(h, wd, fmt=fmt))
+    return b.build()
+
+
+def test_builder_topology_and_signature_stability():
+    g1, g2 = _mlp_graph(), _mlp_graph()
+    assert g1.signature() == g2.signature()
+    assert g1.n_dispatches == 3
+    assert _mlp_graph(m=16).signature() != g1.signature()
+    assert _mlp_graph(fmt="int8").signature() != g1.signature()
+    # nodes are topologically ordered by construction
+    known = set(g1.inputs)
+    for n in g1.nodes:
+        assert all(v in known for v in n.inputs())
+        known.update(n.outs())
+
+
+def test_epilogue_absorption_bias_activation_residual():
+    """add-bias → softcap/act spec → add-residual all fold into the
+    producing GemmNode; the fused program is one dispatch and matches
+    the unfused execution."""
+    m, d, n = 8, 32, 48
+    b = GraphBuilder()
+    x = b.input((m, d), "float32")
+    w = b.input((d, n), "float32")
+    bias = b.input((n,), "float32")
+    c = b.input((m, n), "float32")
+    y = b.gemm(x, w, fmt="fp32")
+    y = b.add(y, bias)                       # row bias
+    y = b.add(y, c)                          # residual (beta=1)
+    y = b.epilogue(y, Epilogue(activation="gelu"))
+    b.output(y)
+    graph = b.build()
+    assert graph.n_dispatches == 1 and len(graph.nodes) == 4
+
+    fused = fuse_mod.fuse(graph, rules=(fuse_mod.absorb_epilogues,))
+    assert len(fused.nodes) == 1
+    (node,) = fused.nodes
+    assert node.epilogue.has_bias and node.epilogue.beta == 1.0
+    assert node.epilogue.activation == "gelu"
+
+    args = (_arr(m, d), _arr(d, n), _arr(n), _arr(m, n))
+    out_unfused = compile_graph(graph, fuse=False)(*args)
+    out_fused = compile_graph(fused, fuse=False)(*args)
+    np.testing.assert_allclose(np.asarray(out_fused),
+                               np.asarray(out_unfused),
+                               rtol=1e-5, atol=1e-5)
+    # ...and equals the eager fused dispatch.
+    want = ops.mte_gemm(args[0], args[1], c=args[3], bias=args[2],
+                        epilogue=Epilogue(beta=1.0, has_bias=True,
+                                          activation="gelu"))
+    np.testing.assert_array_equal(out_fused, want)
+
+
+def test_parallel_branch_residual_absorbs_into_later_gemm():
+    """add(gemm1, gemm2) — the parallel-branch shape: the residual may
+    only fold into the gemm whose operands are all available at its
+    position (the LATER one), never backwards into gemm1 (which would
+    reference a value produced after it).  The fused program must
+    compile and execute."""
+    m, d, n = 8, 32, 24
+    b = GraphBuilder()
+    x = b.input((m, d), "float32")
+    w1 = b.input((d, n), "float32")
+    w2 = b.input((d, n), "float32")
+    a1 = b.gemm(x, w1, fmt="fp32")
+    a2 = b.gemm(x, w2, fmt="fp32")
+    b.output(b.add(a1, a2))
+    graph = b.build()
+    fused = fuse_mod.fuse(graph, rules=(fuse_mod.absorb_epilogues,))
+    assert len(fused.nodes) == 2  # the add folded into gemm2 (beta=1)
+    assert any(isinstance(nd, ir_mod.GemmNode) and nd.epilogue.beta == 1.0
+               for nd in fused.nodes)
+    args = (_arr(m, d), _arr(d, n), _arr(d, n))
+    out = compile_graph(graph)(*args)          # full pipeline, must run
+    want = (ops.mte_gemm(args[0], args[1])
+            + ops.mte_gemm(args[0], args[2]))
+    assert _rel(out, want) < 1e-5
+
+
+def test_chained_members_are_not_grouped():
+    """gemm(x, w) feeding gemm(x, y1) as its *weight* shares the left
+    operand but is a chain, not a sibling — grouping it would create a
+    self-referencing GroupNode.  The program must stay ungrouped and
+    execute."""
+    m = 16
+    b = GraphBuilder()
+    x = b.input((m, m), "float32")
+    w = b.input((m, m), "float32")
+    y1 = b.gemm(x, w, fmt="fp32")
+    y2 = b.gemm(x, y1, fmt="fp32")
+    b.output(y1, y2)
+    graph = b.build()
+    grouped = fuse_mod.fuse(graph, rules=(fuse_mod.group_siblings,))
+    assert not any(isinstance(nd, ir_mod.GroupNode) for nd in grouped.nodes)
+    args = (_arr(m, m), _arr(m, m))
+    r1, r2 = compile_graph(graph)(*args)
+    want1 = ops.mte_gemm(*args)
+    want2 = ops.mte_gemm(args[0], want1)
+    assert _rel(r1, want1) < 1e-5 and _rel(r2, want2) < 1e-5
+
+
+def test_epilogue_not_absorbed_after_activation():
+    """Additive terms cannot fold behind an existing activation — the
+    BLAS epilogue order applies them first."""
+    b = GraphBuilder()
+    x = b.input((4, 8), "float32")
+    w = b.input((8, 16), "float32")
+    c = b.input((4, 16), "float32")
+    y = b.gemm(x, w, epilogue=Epilogue(activation="relu"), fmt="fp32")
+    b.output(b.add(y, c))
+    fused = fuse_mod.fuse(b.build(), rules=(fuse_mod.absorb_epilogues,))
+    assert len(fused.nodes) == 2  # the residual add stays separate
+
+
+def test_cast_elimination_matching_format_is_exact():
+    """A cast feeding only same-format GEMMs is dropped; re-quantizing a
+    value already on the int8 grid reproduces the same integers, so the
+    rewrite is bit-exact."""
+    m, d, n = 8, 32, 16
+    b = GraphBuilder()
+    x = b.input((m, d), "float32")
+    w = b.input((d, n), "float32")
+    xq = b.cast(x, "int8")
+    b.output(b.gemm(xq, w, fmt="int8"))
+    graph = b.build()
+    fused = fuse_mod.fuse(graph, rules=(fuse_mod.eliminate_casts,))
+    assert len(fused.nodes) == 1  # cast gone
+    args = (_arr(m, d), _arr(d, n))
+    np.testing.assert_array_equal(
+        np.asarray(compile_graph(fused, fuse=False)(*args)),
+        np.asarray(compile_graph(graph, fuse=False)(*args)))
+    # A *mismatched* boundary stays put.
+    b2 = GraphBuilder()
+    x2 = b2.input((m, d), "float32")
+    w2 = b2.input((d, n), "float32")
+    b2.output(b2.gemm(b2.cast(x2, "bf16"), w2, fmt="fp32"))
+    kept = fuse_mod.fuse(b2.build(), rules=(fuse_mod.eliminate_casts,))
+    assert len(kept.nodes) == 2
+
+
+def test_cast_elimination_slot_aware():
+    """Only slots whose kernel-side handling reproduces the cast may drop
+    it: a quantized *weight* cast stays (the kernel's B grid is
+    per-column over K, not the cast's last-axis grid); a float weight
+    cast — an idempotent dtype cast — is dropped."""
+    m, d, n = 8, 32, 16
+
+    def with_weight_cast(fmt):
+        b = GraphBuilder()
+        x = b.input((m, d), "float32")
+        w = b.input((d, n), "float32")
+        b.output(b.gemm(x, b.cast(w, fmt), fmt=fmt))
+        return fuse_mod.fuse(b.build(), rules=(fuse_mod.eliminate_casts,))
+
+    assert len(with_weight_cast("int8").nodes) == 2   # kept
+    assert len(with_weight_cast("bf16").nodes) == 1   # dropped (exact)
+
+    # One cast feeding BOTH slots of a quantized gemm must stay (the
+    # weight slot's per-column-over-K grid differs from the cast's).
+    b3 = GraphBuilder()
+    x3 = b3.input((16, 16), "float32")
+    xq = b3.cast(x3, "int8")
+    b3.output(b3.gemm(xq, xq, fmt="int8"))
+    kept3 = fuse_mod.fuse(b3.build(), rules=(fuse_mod.eliminate_casts,))
+    assert len(kept3.nodes) == 2
+
+
+def test_group_builder_bias_consistency():
+    """A bias operand without a bias-bearing epilogue cannot be silently
+    dropped: the builder defaults has_bias epilogues per member, and an
+    inconsistent explicit combination is rejected."""
+    b = GraphBuilder()
+    x = b.input((4, 8), "float32")
+    w1, w2 = b.input((8, 16), "float32"), b.input((8, 16), "float32")
+    bias = b.input((16,), "float32")
+    outs = b.group(x, weights=[w1, w2], biases=[bias, None])
+    b.output(*outs)
+    prog = compile_graph(b.build(), fuse=False)
+    xa, w1a, w2a, ba = _arr(4, 8), _arr(8, 16), _arr(8, 16), _arr(16)
+    r1, r2 = prog(xa, w1a, w2a, ba)
+    assert _rel(r1, ops.mte_gemm(xa, w1a, bias=ba,
+                                 epilogue=Epilogue(has_bias=True))) < 1e-5
+    assert _rel(r2, ops.mte_gemm(xa, w2a)) < 1e-5
+    with pytest.raises(ValueError, match="has_bias"):
+        b2 = GraphBuilder()
+        x2 = b2.input((4, 8), "float32")
+        w = b2.input((8, 16), "float32")
+        bb = b2.input((16,), "float32")
+        b2.group(x2, weights=[w], biases=[bb],
+                 epilogues=[Epilogue()])  # bias but has_bias=False
+
+
+def test_sibling_grouping_rewrite():
+    g = fuse_mod.fuse(_mlp_graph(), rules=(fuse_mod.group_siblings,))
+    kinds = [type(n).__name__ for n in g.nodes]
+    assert kinds.count("GroupNode") == 1
+    assert g.n_dispatches == 2  # gate+up grouped, down separate
+    group = next(n for n in g.nodes if isinstance(n, ir_mod.GroupNode))
+    assert group.group == 2
+    assert group.epilogues[0].activation == "silu"
+
+
+# -- compiled MLP block: forward + gradient parity per format -----------------
+
+
+def _mlp_setup(fmt, mlp_type="swiglu"):
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              gemm_backend="pallas", format_policy=fmt,
+                              mlp_type=mlp_type)
+    p = layers_mod.init_mlp(jax.random.PRNGKey(0), cfg)
+    x = _arr(2, 8, cfg.d_model)
+    return cfg, p, x
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_compiled_mlp_forward_parity(fmt):
+    cfg, p, x = _mlp_setup(fmt)
+    y_eager = layers_mod.mlp(x, p, dataclasses.replace(cfg,
+                                                       use_graph=False))
+    y_comp = layers_mod.mlp(x, p, cfg)
+    assert y_comp.shape == y_eager.shape
+    rtol = FWD_RTOL[fmt]
+    if rtol is None:
+        np.testing.assert_array_equal(np.asarray(y_comp),
+                                      np.asarray(y_eager))
+    else:
+        assert _rel(y_comp, y_eager) < rtol
+    # The compiled block issues fewer dispatches than eager (3 -> 2).
+    from repro.graph import trace as trace_mod
+    with trace_mod.trace_gemms() as cap:
+        layers_mod.mlp(x, p, cfg)
+    assert cap.n_dispatches == 2
+    with trace_mod.trace_gemms() as cap:
+        layers_mod.mlp(x, p, dataclasses.replace(cfg, use_graph=False))
+    assert cap.n_dispatches == 3
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_compiled_mlp_grad_parity(fmt):
+    """Fused-vs-unfused grad parity on the STE backward: the compiled
+    program's quantized group runs the straight-through contract
+    (full-precision recompute + reference backward), so its grads track
+    the eager per-projection STE grads to fp-reassociation precision."""
+    cfg, p, x = _mlp_setup(fmt)
+    ct = _arr(*x.shape)
+
+    def loss(cfg_):
+        def f(x_, p_):
+            return jnp.sum(layers_mod.mlp(x_, p_, cfg_) * ct)
+        return jax.grad(f, argnums=(0, 1))
+
+    gx_e, gp_e = loss(dataclasses.replace(cfg, use_graph=False))(x, p)
+    gx_c, gp_c = loss(cfg)(x, p)
+    tol = 0.05 if fmt == "bf16acc" else 2e-3
+    assert _rel(gx_c, gx_e) < tol
+    for leaf_c, leaf_e in zip(jax.tree.leaves(gp_c), jax.tree.leaves(gp_e)):
+        assert _rel(leaf_c, leaf_e) < tol
+
+
+def test_compiled_chain_ste_linear_loss_matches_fp32():
+    """STE through a compiled gemm chain with a linear loss: every grad
+    component that depends only on *residuals* (dx, dw1 — the backward
+    always runs full precision) matches the fp32 program's grads to
+    reassociation precision; dw2 alone sees the quantized intermediate
+    (it is that GEMM's residual), so it tracks fp32 within the forward
+    quantization error — the same bound the eager chain has."""
+    def build(fmt):
+        b = GraphBuilder()
+        x = b.input((8, 32), "float32")
+        w1 = b.input((32, 48), "float32")
+        w2 = b.input((48, 16), "float32")
+        b.output(b.gemm(b.gemm(x, w1, fmt=fmt), w2, fmt=fmt))
+        return b.build()
+
+    x, w1, w2 = _arr(8, 32), _arr(32, 48), _arr(48, 16)
+    ct = _arr(8, 16)
+    grads = {}
+    for fmt in ("fp32", "int8"):
+        prog = compile_graph(build(fmt))
+        grads[fmt] = jax.grad(
+            lambda *a: jnp.sum(prog(*a) * ct), argnums=(0, 1, 2))(x, w1, w2)
+    (dx_q, dw1_q, dw2_q), (dx_f, dw1_f, dw2_f) = grads["int8"], grads["fp32"]
+    assert _rel(dx_q, dx_f) < 1e-5
+    assert _rel(dw1_q, dw1_f) < 1e-5
+    assert _rel(dw2_q, dw2_f) < 0.05
+
+
+# -- the acceptance criterion: >= 30% fewer dispatches ------------------------
+
+
+def test_transformer_block_dispatch_reduction():
+    """Compiling the MLP block + attention projections cuts plan-cache
+    signatures by >= 30% vs eager (and traced dispatches by more)."""
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              gemm_backend="pallas", head_dim=16)
+    key = jax.random.PRNGKey(0)
+    pa = attn_mod.init_attention(key, cfg)
+    pm = layers_mod.init_mlp(key, cfg)
+    x = _arr(2, 8, cfg.d_model)
+    pos = jnp.arange(8)[None, :].repeat(2, 0)
+
+    from repro.graph import trace as trace_mod
+
+    def run(use_graph):
+        autotune.reset_cache()
+        sched_mod.reset_programs()
+        c = dataclasses.replace(cfg, use_graph=use_graph)
+        with trace_mod.trace_gemms() as cap:
+            q, k, v = attn_mod._project_qkv(x, pa, c, pos)
+            o = layers_mod.dense(q.reshape(2, 8, -1), pa["o"], c)
+            y = layers_mod.mlp(x, pm, c)
+        return len(autotune.plan_cache()), cap.n_dispatches, (q, k, v, o, y)
+
+    sigs_eager, disp_eager, outs_eager = run(False)
+    sigs_comp, disp_comp, outs_comp = run(True)
+    assert sigs_comp <= 0.7 * sigs_eager, (sigs_comp, sigs_eager)
+    assert disp_comp < disp_eager
+    for a, b in zip(outs_comp, outs_eager):
+        assert _rel(a, b) < 1e-4
+
+
+# -- tracing mode -------------------------------------------------------------
+
+
+def test_trace_counts_eager_mlp_dispatches():
+    cfg, p, x = _mlp_setup("fp32")
+    cfg = dataclasses.replace(cfg, use_graph=False)
+    with trace_gemms() as cap:
+        layers_mod.mlp(x, p, cfg)
+    assert cap.n_dispatches == 3
+    assert cap.graph().n_dispatches == 3
+    assert all(r.backend == "pallas" for r in cap.records)
+
+
+def test_trace_recovers_sibling_wiring_and_replays():
+    """Dispatches sharing one operand array reconstruct their wiring
+    (the q/k/v pattern); the traced graph is complete, re-fusable into a
+    GroupNode, and replays the captured computation."""
+    a, w1, w2, w3 = _arr(8, 32), _arr(32, 48), _arr(32, 48), _arr(32, 16)
+    with trace_gemms() as cap:
+        y1 = ops.mte_gemm(a, w1)
+        y2 = ops.mte_gemm(a, w2)
+        y3 = ops.mte_gemm(a, w3)
+    g = cap.graph()
+    assert cap.is_complete()
+    assert len(g.inputs) == 4 and len(g.outputs) == 3
+    prog = compile_graph(g)
+    assert prog.n_dispatches < 3  # siblings grouped
+    r1, r2, r3 = prog(a, w1, w2, w3)
+    for got, want in ((r1, y1), (r2, y2), (r3, y3)):
+        assert _rel(got, want) < 1e-5
+
+
+def test_trace_hook_covers_xla_and_reference_backends():
+    from repro.core import dispatch
+    a, b = _arr(8, 16), _arr(16, 8)
+    with trace_gemms() as cap:
+        dispatch.mte_gemm(a, b, backend="xla")
+        dispatch.mte_gemm(a, b, backend="reference")
+        dispatch.mte_gemm(a, b, backend="pallas")
+    assert cap.n_dispatches == 3
+    assert {r.backend for r in cap.records} == {"xla", "reference",
+                                                "pallas"}
+
+
+# -- scheduling ---------------------------------------------------------------
+
+
+def test_program_memoization_and_compile_counts():
+    cfg, p, x = _mlp_setup("fp32")
+    layers_mod.mlp(x, p, cfg)
+    stats0 = sched_mod.program_stats()
+    assert stats0["compiles"] >= 1
+    layers_mod.mlp(x, p, cfg)
+    stats1 = sched_mod.program_stats()
+    assert stats1["compiles"] == stats0["compiles"]  # keyed hit
+    assert stats1["hits"] > stats0["hits"]
+
+
+def test_program_plans_persist_through_plan_cache_json(tmp_path):
+    """Compiled-program plans ride the existing JSON warm start: a
+    warm-started process compiles the same program with ZERO solver
+    calls."""
+    graph = _mlp_graph()
+    compile_graph(graph)
+    assert autotune.cache_stats().solver_calls > 0
+    path = str(tmp_path / "plans.json")
+    autotune.save_plans(path)
+
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+    assert autotune.load_plans(path) >= 2
+    compile_graph(graph)
+    assert autotune.cache_stats().solver_calls == 0  # all warm hits
+
+
+def test_grouping_is_a_scheduling_choice():
+    """The scheduler compares grouped vs ungrouped program scores; for
+    decode-like shapes (grid underfills the cores) grouping must win."""
+    g = _mlp_graph(m=2, d=64, f=128)
+    prog = compile_graph(g)
+    assert prog.n_dispatches == 2 and prog.n_source_dispatches == 3
+    assert any(isinstance(n, ir_mod.GroupNode) for n in prog.graph.nodes)
+    assert prog.modeled_s > 0
+
+
+def test_tile_stabilization_shares_geometry(monkeypatch):
+    """With a reconfiguration cost that dominates, a two-GEMM chain
+    trades per-node-optimal tiles for one shared geometry."""
+    b = GraphBuilder()
+    x = b.input((512, 128), "float32")
+    w1 = b.input((128, 1024), "float32")
+    w2 = b.input((1024, 768), "float32")
+    b.output(b.gemm(b.gemm(x, w1, fmt="fp32"), w2, fmt="fp32"))
+    g = b.build()
+    plans = {i: autotune.plan_cache().plan(
+        sched_mod._node_signature(g, g.nodes[i]))
+        for i in g.kernel_nodes()}
+    geoms = [plans[i].geometry for i in g.kernel_nodes()]
+    assert all(plans[i].route == "mte" for i in g.kernel_nodes())
+    assert geoms[0] != geoms[1]  # per-GEMM optima disagree on this chain
+    monkeypatch.setattr(sched_mod, "RECONFIG_S", 1.0)  # force sharing
+    stab = sched_mod._stabilize_tiles(
+        g, plans, autotune.plan_cache().profile,
+        autotune.plan_cache().n_cores)
+    stab_geoms = {stab[i].geometry for i in g.kernel_nodes()}
+    assert len(stab_geoms) == 1
+    assert all(stab[i].source == "program" for i in g.kernel_nodes())
+    # pinned plans still execute correctly through the geometry override
+    prog = sched_mod.CompiledProgram(
+        graph=g, plans=stab, backend="pallas", signature=g.signature(),
+        modeled_s=0.0, n_source_dispatches=2)
+    args = (_arr(512, 128), _arr(128, 1024), _arr(1024, 768))
+    want = ops.mte_gemm(ops.mte_gemm(args[0], args[1]), args[2])
+    assert _rel(prog(*args), want) < 1e-5
+
+
+def test_decode_qkv_program_single_grouped_signature():
+    """The decode-step program (GroupNode over the prestacked weight)
+    issues exactly ONE grouped signature — the hand-stacked grouped GEMV
+    it replaced did the same."""
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              decode_qkv_grouped=True)
+    key = jax.random.PRNGKey(1)
+    p = attn_mod.init_attention(key, cfg)
+    x = _arr(3, 1, cfg.d_model)
+    pos = jnp.zeros((3, 1), jnp.int32)
+    q, k, v = attn_mod._project_qkv_grouped(x, p, cfg, pos)
+    sigs = list(autotune.plan_cache()._plans)
+    assert len([s for s in sigs if s.group > 1]) == 1
+    assert not [s for s in sigs if s.group == 1]
+    # parity with the per-projection path
+    q2, k2, v2 = attn_mod._project_qkv(
+        x, p, dataclasses.replace(cfg, decode_qkv_grouped=False), pos)
+    for a, bb in ((q, q2), (k, k2), (v, v2)):
+        assert _rel(a, bb) < 1e-4

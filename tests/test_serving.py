@@ -69,3 +69,93 @@ def test_engine_continuous_batching_frees_slots():
     outputs = engine.run()
     assert len(outputs) == n_req
     assert all(len(v) == 4 for v in outputs.values())
+
+
+# -- DeadlineScheduler: the policy-hook worked example ------------------------
+
+
+def test_deadline_scheduler_admits_urgent_first():
+    """EDF on the _pick_admit hook: a later-arriving urgent request jumps
+    an earlier best-effort one, without touching budget/pool mechanics."""
+    from repro.serving.scheduler import DeadlineScheduler
+
+    sched = DeadlineScheduler(slots=1, max_seq_len=64, page_size=16,
+                              default_slack=64)
+    slow = Request(rid=0, prompt=np.zeros(4, np.int32), max_tokens=4)
+    urgent = Request(rid=1, prompt=np.zeros(4, np.int32), max_tokens=4,
+                     deadline=1.0)
+    sched.submit(slow)
+    sched.submit(urgent)
+    got = sched.pop_admit(prefill_len=16)
+    assert got is not None and got[1].rid == 1  # urgent first
+    # FIFO base policy would have admitted rid=0 here.
+
+
+def test_deadline_scheduler_aging_prevents_starvation():
+    """The default-slack aging guard: once a best-effort request has
+    waited past its slack, its effective deadline undercuts fresh urgent
+    deadlines — strict EDF alone would starve it forever."""
+    from repro.serving.scheduler import DeadlineScheduler
+
+    sched = DeadlineScheduler(slots=1, max_seq_len=64, page_size=16,
+                              default_slack=2)
+    old = Request(rid=0, prompt=np.zeros(4, np.int32), max_tokens=4)
+    sched.submit(old)                          # arrival 0 -> effective 2
+    for rid in range(1, 4):
+        sched.submit(Request(rid=rid, prompt=np.zeros(4, np.int32),
+                             max_tokens=4, deadline=100.0 + rid))
+    got = sched.pop_admit(prefill_len=16)
+    assert got is not None and got[1].rid == 0  # aged past every deadline
+
+
+def test_deadline_engine_end_to_end_fair():
+    """Engine-level fairness: under a deadline policy every request still
+    completes, urgent requests are admitted ahead of best-effort ones,
+    and outputs match the FIFO engine's per-request outputs (the policy
+    changes *order*, not results)."""
+    from repro.serving.scheduler import DeadlineScheduler
+
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n, dtype=np.int32)
+               for n in (5, 9, 13)]
+
+    def run(scheduler_cls):
+        engine = ServingEngine(params, cfg, slots=1, cache_len=64,
+                               prefill_len=16, scheduler_cls=scheduler_cls)
+        # rid 0/1 best-effort, rid 2 urgent (submitted last).
+        for rid, p in enumerate(prompts):
+            engine.submit(Request(rid=rid, prompt=p, max_tokens=4,
+                                  deadline=0.5 if rid == 2 else None))
+        return engine, engine.run()
+
+    engine_d, out_d = run(DeadlineScheduler)
+    assert len(out_d) == 3 and all(len(v) == 4 for v in out_d.values())
+    admits = [rid for ev, rid in engine_d.sched.events if ev == "admit"]
+    assert admits[0] == 2  # the urgent request went first
+    engine_f, out_f = run(None)
+    assert out_f == out_d  # same per-request tokens, different order
+
+
+def test_deadline_scheduler_bounded_bypass_under_constant_deadlines():
+    """Starvation-freedom holds structurally: even an endless stream of
+    urgent constant-deadline requests can bypass the oldest best-effort
+    request only ``default_slack`` times before it is force-admitted."""
+    from repro.serving.scheduler import DeadlineScheduler
+
+    sched = DeadlineScheduler(slots=1, max_seq_len=64, page_size=16,
+                              default_slack=3)
+    sched.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                         max_tokens=4))
+    admitted = []
+    for i in range(1, 8):
+        # fresh urgent request, always the same (tiny) absolute deadline
+        sched.submit(Request(rid=i, prompt=np.zeros(4, np.int32),
+                             max_tokens=4, deadline=0.5))
+        got = sched.pop_admit(prefill_len=16)
+        assert got is not None
+        admitted.append(got[1].rid)
+        sched.release(got[0], finished=True)
+    assert 0 in admitted          # strict EDF would never admit rid 0
+    assert admitted.index(0) <= 3  # bounded by default_slack bypasses
