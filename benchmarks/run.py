@@ -28,6 +28,18 @@ MLP block and the decode-step q/k/v projection through ``repro.graph``
 and records eager vs compiled kernel-dispatch counts (traced, not
 estimated), wall-clock per path, and the compiled programs'
 whole-program modeled time; CI asserts compiled < eager.
+
+The **serving-prefix** section (``serving.prefix.*``) serves a
+shared-system-prompt workload cached vs cold (prefix caching aliases the
+shared pages, the cold path recomputes them) and reports the
+chunked-prefill decode-liveness fraction; CI asserts cached > cold.
+
+``--smoke`` also runs the **bench-regression guard**: the
+scheduler-deterministic counters and relative wall-clock metrics of the
+fresh run are compared against the *committed* ``BENCH_gemm.json``
+baseline (see ``REGRESSION_RULES``) and the process exits non-zero on a
+regression — the perf trajectory is enforced, not just recorded
+(``--no-regress-guard`` to skip).
 """
 from __future__ import annotations
 
@@ -220,11 +232,174 @@ def serving_rows(smoke: bool = True):
     ]
 
 
+def serving_prefix_rows(smoke: bool = True):
+    """Serving-prefix section: shared-system-prompt workload, cached vs
+    cold, plus chunked-prefill decode liveness.
+
+    The workload every prefix-cache design brief describes: N requests
+    share a long system prompt and differ only in a short user tail.
+    The *cold* engine (``prefix_cache=False``) recomputes the shared
+    prefix for every request; the *cached* engine aliases it out of the
+    pool and prefills only the tail chunk.  Both engines first serve one
+    untimed warmup request (jit compilation + publishing the prefix), so
+    the timed section is steady-state serving — the measured speedup is
+    recompute-vs-alias, not compile noise.  The liveness row drives a
+    long prompt through chunked prefill while another slot decodes and
+    reports the fraction of those steps on which the decode advanced
+    (1.0 = a chunk never stalls an in-flight decode — the tail-latency
+    guarantee, in scheduler-deterministic form).
+    """
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("gemma_2b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                              vocab=128, n_heads=2, n_kv_heads=1,
+                              head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prefill_len, chunk, page = 128, 16, 16
+    n_req = 6 if smoke else 12
+    max_tokens = 4 if smoke else 8
+    system = rng.integers(0, cfg.vocab, prefill_len - chunk, dtype=np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, cfg.vocab, chunk,
+                                            dtype=np.int32)])
+               for _ in range(n_req + 1)]
+
+    def serve(prefix_cache):
+        eng = ServingEngine(params, cfg, slots=2, cache_len=160,
+                            prefill_len=prefill_len, page_size=page,
+                            prefill_chunk=chunk, prefix_cache=prefix_cache)
+        eng.submit(Request(rid=0, prompt=prompts[0],
+                           max_tokens=max_tokens))
+        eng.run()                      # untimed warmup: compiles + publishes
+        for rid in range(1, n_req + 1):
+            eng.submit(Request(rid=rid, prompt=prompts[rid],
+                               max_tokens=max_tokens))
+        t0 = time.perf_counter()
+        out = eng.run()
+        dt = time.perf_counter() - t0
+        tokens = sum(len(v) for v in out.values())
+        return eng, tokens / max(dt, 1e-9), dt
+
+    eng_cold, cold_tps, cold_dt = serve(False)
+    eng_cached, cached_tps, cached_dt = serve(True)
+    m = eng_cached.metrics()
+    speedup = cached_tps / max(cold_tps, 1e-9)
+
+    # -- chunked-prefill decode liveness --------------------------------------
+    # prefix_cache=False: the long prompt must really chunk through all
+    # prefill_len/chunk steps — a prefix hit would collapse the measured
+    # window to a single step and make the liveness fraction a 1-sample
+    # statistic.
+    eng = ServingEngine(params, cfg, slots=2, cache_len=160,
+                        prefill_len=prefill_len, page_size=page,
+                        prefill_chunk=chunk, prefix_cache=False)
+    a = Request(rid=0, prompt=prompts[0], max_tokens=64)
+    eng.submit(a)
+    for _ in range(40):
+        eng._admit()
+        eng.step()
+        if len(a.output) >= 2:
+            break
+    eng.submit(Request(rid=1, prompt=prompts[1], max_tokens=4))
+    eng._admit()
+    alive = total = 0
+    while eng._prefilling and total < 64:
+        before = len(a.output)
+        eng.step()
+        total += 1
+        alive += int(len(a.output) > before)
+    liveness = alive / max(total, 1)
+
+    return [
+        ("serving.prefix.cold_tokens_per_s", f"{cold_dt * 1e6:.0f}",
+         f"{cold_tps:.1f}"),
+        ("serving.prefix.cached_tokens_per_s", f"{cached_dt * 1e6:.0f}",
+         f"{cached_tps:.1f}"),
+        ("serving.prefix.cached_vs_cold_speedup", "", f"{speedup:.2f}x"),
+        ("serving.prefix.hit_rate", "", f"{m['prefix_hit_rate']:.3f}"),
+        ("serving.prefix.cached_prefill_tokens", "",
+         f"{m['cached_prefill_tokens']}"),
+        ("serving.prefix.cow_copies", "", f"{m['cow_copies']}"),
+        ("serving.prefix.chunked_decode_liveness", "", f"{liveness:.3f}"),
+    ]
+
+
+# -- bench-regression guard ----------------------------------------------------
+
+# (key, minimum, maximum-ratio-vs-baseline, absolute-minimum): only
+# scheduler-deterministic counters and *relative* wall-clock metrics are
+# guarded — absolute tokens/s depends on the CI machine of the day.
+REGRESSION_RULES = [
+    # new >= baseline * min_ratio          (None: not checked)
+    # new <= baseline * max_ratio          (None: not checked)
+    # new >= absolute                      (None: not checked)
+    ("serving.throughput.batch_occupancy",        0.80, None, None),
+    ("serving.throughput.grouped_decode_plans",   None, 1.00, None),
+    ("graph.fusion.mlp.compiled_dispatches",      None, 1.00, None),
+    ("graph.fusion.decode_qkv.compiled_dispatches", None, 1.00, None),
+    ("serving.prefix.cached_vs_cold_speedup",     None, None, 1.10),
+    ("serving.prefix.chunked_decode_liveness",    None, None, 0.99),
+]
+
+
+def _bench_float(entry) -> float:
+    return float(str(entry["derived"]).split(",")[0].rstrip("x%"))
+
+
+def check_regressions(new: dict, baseline: dict) -> list:
+    """Compare the freshly-measured bench values against the committed
+    ``BENCH_gemm.json`` baseline.  Returns human-readable failure lines
+    (empty = no regression).  Missing keys on either side are skipped —
+    a new section must not fail the guard on the PR that introduces it.
+    """
+    failures = []
+    for key, min_ratio, max_ratio, absolute in REGRESSION_RULES:
+        if key not in new:
+            continue
+        try:
+            cur = _bench_float(new[key])
+        except (ValueError, TypeError):
+            continue
+        if absolute is not None and cur < absolute:
+            failures.append(f"{key}: {cur:.3f} < required {absolute:.3f}")
+        if key not in baseline:
+            continue
+        try:
+            base = _bench_float(baseline[key])
+        except (ValueError, TypeError):
+            continue
+        if min_ratio is not None and cur < base * min_ratio:
+            failures.append(f"{key}: {cur:.3f} < baseline {base:.3f} "
+                            f"x {min_ratio}")
+        if max_ratio is not None and cur > base * max_ratio:
+            failures.append(f"{key}: {cur:.3f} > baseline {base:.3f} "
+                            f"x {max_ratio}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: analytic tables + format sweep only")
+    ap.add_argument("--no-regress-guard", action="store_true",
+                    help="skip the --smoke comparison against the "
+                         "committed BENCH_gemm.json baseline")
     args = ap.parse_args()
+    baseline = None
+    if args.smoke and not args.no_regress_guard \
+            and os.path.exists("BENCH_gemm.json"):
+        with open("BENCH_gemm.json") as f:
+            baseline = json.load(f)
     csv_rows = []
 
     from benchmarks import tables
@@ -333,6 +508,9 @@ def main() -> None:
     # -- serving throughput (continuous batching over the paged KV pool) ---------
     csv_rows.extend(serving_rows(smoke=args.smoke))
 
+    # -- prefix caching + chunked prefill (shared-system-prompt workload) --------
+    csv_rows.extend(serving_prefix_rows(smoke=args.smoke))
+
     # -- roofline (if dry-run artifacts exist) --------------------------------------
     if not args.smoke:
         try:
@@ -359,6 +537,16 @@ def main() -> None:
     with open("BENCH_gemm.json", "w") as f:
         json.dump(bench, f, indent=1, sort_keys=True)
     print(f"wrote BENCH_gemm.json ({len(bench)} entries)", file=sys.stderr)
+
+    if baseline is not None:
+        failures = check_regressions(bench, baseline)
+        if failures:
+            print("bench-regression guard FAILED:", file=sys.stderr)
+            for line in failures:
+                print(f"  {line}", file=sys.stderr)
+            raise SystemExit(2)
+        print("bench-regression guard passed "
+              f"({len(REGRESSION_RULES)} rules)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -40,6 +40,19 @@ def main():
                          "default: compute dtype)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="admission cap on committed in-flight tokens")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="content-hash KV page sharing across requests "
+                         "(--no-prefix-cache recomputes every prefix; "
+                         "aliasing needs --prefill-chunk < --prefill-len)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt-chunk tokens for incremental prefill "
+                         "(must divide --prefill-len; default: the whole "
+                         "window, i.e. one chunk)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every synthetic request this many shared "
+                         "leading tokens (a system prompt) — the "
+                         "prefix-cache demo workload")
     ap.add_argument("--plan-cache", default=None,
                     help="GEMM plan-cache JSON to warm-start from / save to")
     ap.add_argument("--no-graph", action="store_true",
@@ -63,13 +76,20 @@ def main():
                            num_pages=args.num_pages,
                            kv_format=args.kv_format,
                            token_budget=args.token_budget,
+                           prefix_cache=args.prefix_cache,
+                           prefill_chunk=args.prefill_chunk,
                            plan_cache_path=args.plan_cache)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, size=args.shared_prefix,
+                          dtype=np.int32)
     for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab,
-                              size=rng.integers(4, args.prefill_len),
-                              dtype=np.int32)
+        tail_len = (max(1, args.prefill_len - args.shared_prefix)
+                    if args.shared_prefix
+                    else int(rng.integers(4, args.prefill_len)))
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab, size=tail_len,
+                                  dtype=np.int32)])
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_tokens=args.max_tokens,
                               temperature=args.temperature))
@@ -86,6 +106,13 @@ def main():
           f"preemptions {m['preemptions']}, kv_format {m['kv_format']}, "
           f"pool {m['num_pages']}x{m['page_size']} "
           f"({m['free_pages']} free at exit)")
+    print(f"  prefix cache {'on' if m['prefix_cache'] else 'off'} "
+          f"(chunk {m['prefill_chunk']}): hit rate "
+          f"{m['prefix_hit_rate']:.2f} "
+          f"({m['cached_prefill_tokens']} tokens aliased, "
+          f"{m['prefix_hit_pages']} pages / {m['prefix_queries']} queries), "
+          f"{m['shared_pages']} shared, {m['cached_pages']} cached, "
+          f"{m['cow_copies']} cow copies")
     for rid in sorted(outputs):
         print(f"  req {rid}: {outputs[rid][:12]}...")
     if args.plan_cache:

@@ -16,13 +16,15 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.layers import (dense, init_dense, init_norm, model_format,
                                  rmsnorm, rope, use_graph)
 
 __all__ = ["init_attention", "attention", "init_attn_cache",
            "decode_attention", "init_paged_attn_cache",
-           "paged_decode_attention", "quantize_kv"]
+           "paged_decode_attention", "paged_prefill_attention",
+           "ring_chunk_attention"]
 
 _NEG_INF = -1e30
 
@@ -346,14 +348,6 @@ def _quantize_kv(x, per_channel: bool = True):
     return q.astype(jnp.int8), scale.astype(jnp.float32)
 
 
-def quantize_kv(x, fmt):
-    """Quantize KV under a FormatPolicy (public: the serving engine uses
-    this to fill pages from prefill caches).  Non-quantized policies cast."""
-    if fmt.quantized:
-        return _quantize_kv(x, per_channel=fmt.per_channel)
-    return x.astype(fmt.operand_jnp), None
-
-
 def _dequantize_kv(q, scale, dtype):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
@@ -543,6 +537,136 @@ def paged_decode_attention(x, p, cfg, cache, pos, page_table, *,
             chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
         out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     return dense(out, p["o"], cfg), new_cache
+
+
+def paged_prefill_attention(x, p, cfg, cache, positions, page_table, *,
+                            kv_len: int):
+    """One prefill *chunk* over the paged KV pool.
+
+    x: (1, C, D) chunk activations; positions: (1, C) absolute positions
+    ``[kv_len − C, kv_len)``; page_table: (1, max_pages).  The chunk's
+    K/V are quantized under ``cfg.kv_cache_format`` and scattered into
+    their (physical page, slot) targets *for storage*; the attention
+    read uses the chunk's own K/V at full compute precision (prefill
+    stays full-precision within a chunk — storage quantization only
+    touches what later chunks/decodes re-read) concatenated with the
+    pool pages holding the prior prefix — which includes pages this
+    request only *aliased* from the prefix cache (the partial-prefix
+    read the serving engine's prefix-cached admission relies on: the hit
+    path re-reads cached KV, it never recomputes it).  ``kv_len`` is
+    static, so every chunk index compiles once, the gather touches only
+    the live prefix pages, and all chunk GEMMs share the single (C, D)
+    plan-cache signature.  Returns (out, new_cache).
+    """
+    b, c_len, _ = x.shape
+    hd = cfg.hd
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    page = cache["k_pages"].shape[1]
+    pos_v = positions[0]                       # (C,) absolute positions
+    phys = jnp.maximum(page_table[0, pos_v // page], 0)
+    slot = pos_v % page
+    fmt = _kv_storage_format(cfg)
+    quant = "k_scale" in cache
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k[0], per_channel=fmt.per_channel)
+        vq, vs = _quantize_kv(v[0], per_channel=fmt.per_channel)
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(kq)
+        new_cache["k_scale"] = cache["k_scale"].at[phys, slot].set(ks)
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(vq)
+        new_cache["v_scale"] = cache["v_scale"].at[phys, slot].set(vs)
+    else:
+        dt = cache["k_pages"].dtype
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(
+            k[0].astype(dt))
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(
+            v[0].astype(dt))
+
+    # Gather only the pages holding the prior prefix [0, pos0) into
+    # logical order (slot j of the view is absolute position j) and
+    # append the chunk's full-precision K/V — pos0 = kv_len − C is
+    # static, so the read is bounded by the live prefix, not max_pages.
+    pos0 = kv_len - c_len
+    n_prefix = -(-pos0 // page)                    # pages covering [0, pos0)
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def gather(leaf):
+        g = leaf[jnp.maximum(page_table[:, :n_prefix], 0)]
+        return g.reshape(b, n_prefix * page, *leaf.shape[2:])[:, :pos0]
+
+    if pos0:
+        kg = gather(new_cache["k_pages"])
+        vg = gather(new_cache["v_pages"])
+        if quant:
+            kg = _dequantize_kv(kg, gather(new_cache["k_scale"]), cdt)
+            vg = _dequantize_kv(vg, gather(new_cache["v_scale"]), cdt)
+        kg = jnp.concatenate([kg.astype(cdt), k.astype(cdt)], axis=1)
+        vg = jnp.concatenate([vg.astype(cdt), v.astype(cdt)], axis=1)
+    else:
+        kg, vg = k.astype(cdt), v.astype(cdt)
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    if cfg.gemm_backend == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+            vg.transpose(0, 2, 1, 3), causal=True, window=None,
+            softcap=cfg.attn_softcap, scale=scale)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = _xla_attention(
+            q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+            vg.transpose(0, 2, 1, 3), causal=True, window=None,
+            softcap=cfg.attn_softcap, scale=scale,
+            q_positions=positions,
+            chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+        out = out.transpose(0, 2, 1, 3)
+    return dense(out.reshape(b, c_len, -1), p["o"], cfg), new_cache
+
+
+def ring_chunk_attention(x, p, cfg, cache, positions, *, pos0: int,
+                         window: int):
+    """One prefill chunk of a sliding-window layer over its ring cache.
+
+    x: (1, C, D); cache: the slot's (1, L, kv, hd) ring (L =
+    min(window, cache_len)); ``pos0`` (static) is the chunk's first
+    absolute position.  The chunk attends to the ring's pre-chunk
+    contents plus itself under the window mask, then the chunk's last
+    min(C, L) tokens overwrite their ring slots (slot = pos mod L) — the
+    same layout decode and ``prefill_cache`` maintain, so decode resumes
+    seamlessly after the last chunk.  Returns (out, new_cache).
+    """
+    b, c_len, _ = x.shape
+    hd = cfg.hd
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    ring_k, ring_v = cache["k"], cache["v"]
+    length = ring_k.shape[1]
+    idx = jnp.arange(length)
+    # Ring slot i holds the most recent absolute position ≡ i (mod L)
+    # strictly before the chunk; never-written slots and the chunk's own
+    # positions are masked out (−1).
+    rp = pos0 - ((pos0 - idx) % length)
+    rp = jnp.where((rp >= pos0) | (rp < 0), -1, rp)
+    kv_positions = jnp.concatenate(
+        [jnp.broadcast_to(rp[None], (b, length)), positions], axis=1)
+    kc = jnp.concatenate([ring_k, k.astype(ring_k.dtype)], axis=1)
+    vc = jnp.concatenate([ring_v, v.astype(ring_v.dtype)], axis=1)
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    out = _xla_attention(
+        q.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), causal=True, window=window,
+        softcap=cfg.attn_softcap, scale=scale,
+        kv_positions=kv_positions, q_positions=positions,
+        chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+    out = out.transpose(0, 2, 1, 3)
+
+    keep = min(c_len, length)
+    slots = (pos0 + c_len - keep + np.arange(keep)) % length
+    new_cache = dict(cache)
+    new_cache["k"] = ring_k.at[:, slots].set(
+        k[:, c_len - keep:].astype(ring_k.dtype))
+    new_cache["v"] = ring_v.at[:, slots].set(
+        v[:, c_len - keep:].astype(ring_v.dtype))
+    return dense(out.reshape(b, c_len, -1), p["o"], cfg), new_cache
 
 
 def prefill_cache(k, v, cfg, seq_len: int, window: Optional[int], dtype

@@ -7,9 +7,14 @@ scanned body) plus an explicitly-unrolled tail for layer counts that do not
 divide the period (e.g. recurrentgemma's 38 = 12·3 + 2).  Activation
 rematerialization wraps the group body per ``cfg.remat``.
 
-Three entry points:
+Four entry points:
 - ``forward``  — training forward → logits (+ MoE aux loss)
 - ``prefill``  — forward that also returns the decode cache
+- ``prefill_chunk`` — one fixed-size prompt chunk straight into a *paged*
+  decode cache (the serving engine's incremental prefill: attention
+  layers write the chunk's KV into pool pages and attend over the pages
+  already holding the prefix — including pages merely aliased from the
+  prefix cache — while ring/recurrent layers carry their slot state)
 - ``decode``   — single-token cached step
 
 Cache pytrees mirror the params pytree: ``{"groups": stacked, "tail": [..]}``.
@@ -31,8 +36,8 @@ from repro.models import ssm as ssm_mod
 from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
                                  mlp, norm, unembed)
 
-__all__ = ["init_params", "forward", "prefill", "decode", "init_cache",
-           "init_paged_cache", "loss_fn", "param_count"]
+__all__ = ["init_params", "forward", "prefill", "prefill_chunk", "decode",
+           "init_cache", "init_paged_cache", "loss_fn", "param_count"]
 
 
 # -- init ---------------------------------------------------------------------
@@ -103,10 +108,30 @@ def param_count(params) -> int:
 # -- one layer ----------------------------------------------------------------
 
 
+def _slot_slice(tree, slot):
+    """One slot's (1, ...) view of a batch-axis-0 cache tree."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), tree)
+
+
+def _slot_update(full, one, slot):
+    """Write a (1, ...) slot state back into the batch-axis-0 tree."""
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=0), full, one)
+
+
 def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
                  cache=None, pos=None, cache_len: Optional[int] = None,
-                 page_table=None):
-    """Returns (x, new_cache, aux)."""
+                 page_table=None, slot=None, chunk_pos0: Optional[int] = None):
+    """Returns (x, new_cache, aux).
+
+    ``mode="prefill_chunk"`` runs one (1, C, D) prompt chunk against the
+    serving cache: paged attention layers scatter the chunk's KV into
+    pool pages and read the whole prefix back through ``page_table``
+    (``chunk_pos0`` is the chunk's static first position); ring/recurrent
+    layers carry the state of batch row ``slot``.
+    """
     mixer_kind, ffn_kind = kinds
     window = cfg.window if mixer_kind == "local" else None
     aux = jnp.zeros((), jnp.float32)
@@ -114,7 +139,18 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
 
     h = norm(x, lp["norm1"], cfg.norm_type)
     if mixer_kind in ("attn", "local"):
-        if mode == "decode" and isinstance(cache, dict) and "k_pages" in cache:
+        if mode == "prefill_chunk":
+            if isinstance(cache, dict) and "k_pages" in cache:
+                out, new_cache = attn_mod.paged_prefill_attention(
+                    h, lp["mixer"], cfg, cache, positions, page_table,
+                    kv_len=chunk_pos0 + h.shape[1])
+            else:  # sliding-window ring: per-slot state
+                one = _slot_slice(cache, slot)
+                out, one = attn_mod.ring_chunk_attention(
+                    h, lp["mixer"], cfg, one, positions, pos0=chunk_pos0,
+                    window=window)
+                new_cache = _slot_update(cache, one, slot)
+        elif mode == "decode" and isinstance(cache, dict) and "k_pages" in cache:
             # Paged KV pool (serving): the layer reads/writes through the
             # batch-wide page table instead of a per-slot cache stripe.
             out, new_cache = attn_mod.paged_decode_attention(
@@ -134,6 +170,13 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     elif mixer_kind == "rglru":
         if mode == "decode":
             out, new_cache = rglru_mod.rglru_decode(h, lp["mixer"], cfg, cache)
+        elif mode == "prefill_chunk":
+            # Chunk 0 starts fresh (the slot row holds its previous
+            # occupant's state); later chunks resume the carried state.
+            one = _slot_slice(cache, slot) if chunk_pos0 else None
+            out, one = rglru_mod.rglru_forward(h, lp["mixer"], cfg,
+                                               return_cache=True, cache=one)
+            new_cache = _slot_update(cache, one, slot)
         elif mode == "prefill":
             out, new_cache = rglru_mod.rglru_forward(h, lp["mixer"], cfg,
                                                      return_cache=True)
@@ -142,6 +185,11 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     elif mixer_kind == "ssd":
         if mode == "decode":
             out, new_cache = ssm_mod.ssd_decode(h, lp["mixer"], cfg, cache)
+        elif mode == "prefill_chunk":
+            one = _slot_slice(cache, slot) if chunk_pos0 else None
+            out, one = ssm_mod.ssd_forward(h, lp["mixer"], cfg,
+                                           return_cache=True, cache=one)
+            new_cache = _slot_update(cache, one, slot)
         elif mode == "prefill":
             out, new_cache = ssm_mod.ssd_forward(h, lp["mixer"], cfg,
                                                  return_cache=True)
@@ -196,15 +244,17 @@ def _remat(fn, cfg: ArchConfig):
 
 def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
                cache=None, pos=None, cache_len: Optional[int] = None,
-               page_table=None):
+               page_table=None, slot=None, chunk_pos0: Optional[int] = None):
     """Scan the group stack + unrolled tail.  Returns (x, new_cache, aux)."""
     n_groups, n_tail = _group_layout(cfg)
     kinds = cfg.layer_kinds
     aux_total = jnp.zeros((), jnp.float32)
     new_cache = {"groups": None, "tail": []}
+    cached_modes = ("prefill", "decode", "prefill_chunk")
+    threads_cache = mode in ("decode", "prefill_chunk")
 
     if n_groups:
-        has_cache = mode in ("prefill", "decode")
+        has_cache = mode in cached_modes
 
         def group_body(carry, xs):
             from repro.distributed.sharding import constrain
@@ -212,38 +262,38 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
             # Pin the scan carry (and its saved-for-backward residuals) to
             # batch sharding — inference can drift to weight-style sharding.
             xc = constrain(xc, ("pod", "data"), None, None)
-            gp = xs[0] if has_cache and mode == "decode" else xs
-            gc = xs[1] if has_cache and mode == "decode" else None
+            gp = xs[0] if has_cache and threads_cache else xs
+            gc = xs[1] if has_cache and threads_cache else None
             caches_out = []
             for j in range(cfg.period):
                 layer_cache = gc[j] if gc is not None else None
                 xc, c_new, aux = _apply_layer(
                     xc, _index_tree(gp, j), cfg, kinds[j], positions, mode,
                     cache=layer_cache, pos=pos, cache_len=cache_len,
-                    page_table=page_table)
+                    page_table=page_table, slot=slot, chunk_pos0=chunk_pos0)
                 caches_out.append(c_new)
                 auxc = auxc + aux
             ys = tuple(caches_out) if has_cache else None
             return (xc, auxc), ys
 
         body = _remat(group_body, cfg)
-        if mode == "decode":
+        if threads_cache:
             xs = (params["groups"], cache["groups"])
         else:
             xs = params["groups"]
         (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
-        if mode in ("prefill", "decode"):
+        if mode in cached_modes:
             new_cache["groups"] = ys
 
     for j in range(n_tail):
         idx = n_groups * cfg.period + j
-        layer_cache = cache["tail"][j] if (cache and mode == "decode") else None
+        layer_cache = cache["tail"][j] if (cache and threads_cache) else None
         x, c_new, aux = _apply_layer(
             x, params["tail"][j], cfg, kinds[idx], positions, mode,
             cache=layer_cache, pos=pos, cache_len=cache_len,
-            page_table=page_table)
+            page_table=page_table, slot=slot, chunk_pos0=chunk_pos0)
         aux_total = aux_total + aux
-        if mode in ("prefill", "decode"):
+        if mode in cached_modes:
             new_cache["tail"].append(c_new)
 
     return x, new_cache, aux_total
@@ -298,6 +348,31 @@ def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None):
     x = norm(x, params["final_norm"], cfg.norm_type)
     logits = unembed(x[:, -1:], params["embedding"], cfg)
     return logits[:, 0], cache
+
+
+def prefill_chunk(params, batch, cache, cfg: ArchConfig, *, pos0: int):
+    """One fixed-size prompt chunk against a *paged* decode cache.
+
+    ``batch``: ``tokens`` (1, C) — the chunk, absolute positions
+    ``[pos0, pos0+C)``; ``page_table`` (1, max_pages) — the sequence's
+    logical→physical page map (every page covering ``[0, pos0+C)`` must
+    be allocated, cached-prefix pages included); ``slot`` — scalar int32
+    batch row whose ring/recurrent state this chunk advances.  ``pos0``
+    is static: each chunk index compiles once, every chunk's GEMMs share
+    the one (C, D) plan-cache signature, and the attention read covers
+    exactly the live prefix.  Returns (last-position logits (1, V),
+    new_cache) — the final chunk's logits seed sampling, mid-prompt
+    chunks' logits are discarded.
+    """
+    x, b, s = _inputs_to_x(batch, params, cfg)
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)[None, :]
+    x, new_cache, _ = _run_stack(x, params, cfg, positions, "prefill_chunk",
+                                 cache=cache, slot=batch.get("slot", 0),
+                                 page_table=batch["page_table"],
+                                 chunk_pos0=pos0)
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = unembed(x[:, -1:], params["embedding"], cfg)
+    return logits[:, 0], new_cache
 
 
 def decode(params, batch, cache, cfg: ArchConfig):

@@ -67,13 +67,29 @@ def _gates(x, p, cfg):
     return log_a, gated
 
 
-def rglru_forward(x, p, cfg, *, return_cache: bool = False):
-    """x: (B, S, D) → (B, S, D)."""
+def rglru_forward(x, p, cfg, *, return_cache: bool = False, cache=None):
+    """x: (B, S, D) → (B, S, D).
+
+    ``cache`` (optional ``{"h", "conv"}`` from a previous call) resumes
+    the recurrence mid-sequence — the serving engine's chunked prefill
+    runs one call per prompt chunk.  The initial state folds in exactly:
+    ``h_t += (∏_{k≤t} a_k)·h₀`` on top of the zero-state scan, and the
+    causal conv sees the previous chunk's raw-projection tail instead of
+    zero padding.
+    """
     gate = dense(x, p["gate_proj"], cfg, activation="gelu")
     u_raw = dense(x, p["rec_proj"], cfg)
-    u = _causal_conv(u_raw.astype(jnp.float32),
+    s = u_raw.shape[1]
+    conv_in = u_raw
+    hist = 0
+    if cache is not None:
+        hist = cache["conv"].shape[1]
+        conv_in = jnp.concatenate(
+            [cache["conv"].astype(u_raw.dtype), u_raw], axis=1)
+    u = _causal_conv(conv_in.astype(jnp.float32),
                      p["conv_w"].astype(jnp.float32),
-                     p["conv_b"].astype(jnp.float32)).astype(u_raw.dtype)
+                     p["conv_b"].astype(jnp.float32)
+                     )[:, hist:].astype(u_raw.dtype)
 
     log_a, gated = _gates(u, p, cfg)
     a = jnp.exp(log_a)
@@ -90,14 +106,17 @@ def rglru_forward(x, p, cfg, *, return_cache: bool = False):
             return a1 * a2, a2 * b1 + b2
 
         _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if cache is not None:
+        h = h + jnp.exp(jnp.cumsum(log_a, axis=1)) * cache["h"][:, None]
     out = dense(gate * h.astype(x.dtype), p["out_proj"], cfg)
     if return_cache:
         w = cfg.rglru.conv_width
-        tail = u_raw[:, -w:]
+        tail = conv_in[:, -w:] if cache is not None else u_raw[:, -w:]
         pad = w - tail.shape[1]
         if pad > 0:
             tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
-        return out, {"h": h[:, -1], "conv": tail}
+        return out, {"h": h[:, -1], "conv": tail.astype(
+            jnp.dtype(cfg.compute_dtype))}
     return out
 
 

@@ -78,11 +78,13 @@ def _split_proj(zxbcdt, cfg):
     return z, xBC, dt
 
 
-def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int):
+def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int, h0=None):
     """Chunked state-space duality.
 
     x: (B, S, H, P); dt: (B, S, H); a_log: (H,) (A = -exp(a_log));
-    bmat/cmat: (B, S, N).  Returns (B, S, H, P) f32.
+    bmat/cmat: (B, S, N); h0: optional (B, H, P, N) initial state (the
+    serving engine's chunked prefill resumes mid-sequence).  Returns
+    (B, S, H, P) f32.
     """
     b, s, h, p = x.shape
     n = bmat.shape[-1]
@@ -129,7 +131,8 @@ def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int):
         new = carry * dec[:, :, None, None] + st
         return new, carry  # emit the state BEFORE this chunk
 
-    init = jnp.zeros((b, h, p, n), jnp.float32)
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
     final_state, prev_states = jax.lax.scan(
         step, init, (chunk_decay.transpose(1, 0, 2),
                      states.transpose(1, 0, 2, 3, 4)))
@@ -143,8 +146,13 @@ def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int):
     return y[:, :s], final_state
 
 
-def ssd_forward(x, p, cfg, *, return_cache: bool = False):
-    """Full Mamba2 block forward.  x: (B, S, D) → (B, S, D)."""
+def ssd_forward(x, p, cfg, *, return_cache: bool = False, cache=None):
+    """Full Mamba2 block forward.  x: (B, S, D) → (B, S, D).
+
+    ``cache`` (optional ``{"state", "conv"}``) resumes the recurrence
+    mid-sequence for the serving engine's chunked prefill: the conv ring
+    replaces the zero padding and the inter-chunk scan starts from the
+    carried state."""
     s = cfg.ssm
     d_inner, n_heads, _ = _dims(cfg)
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -152,15 +160,21 @@ def ssd_forward(x, p, cfg, *, return_cache: bool = False):
                         p["in_proj"]["w"].astype(cdt),
                         preferred_element_type=jnp.float32)
     z, xbc, dt = _split_proj(zxbcdt, cfg)
+    hist = 0
+    if cache is not None:
+        hist = cache["conv"].shape[1]
+        xbc = jnp.concatenate(
+            [cache["conv"].astype(jnp.float32), xbc], axis=1)
     xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(jnp.float32),
-                                   p["conv_b"].astype(jnp.float32)))
+                                   p["conv_b"].astype(jnp.float32)))[:, hist:]
     x_in = xbc[..., :d_inner]
     bmat = xbc[..., d_inner: d_inner + s.d_state]
     cmat = xbc[..., d_inner + s.d_state:]
     dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
 
     xh = x_in.reshape(*x_in.shape[:2], n_heads, s.head_dim)
-    y, final_state = _ssd_chunked(xh, dt, p["A_log"], bmat, cmat, s.chunk)
+    y, final_state = _ssd_chunked(xh, dt, p["A_log"], bmat, cmat, s.chunk,
+                                  h0=cache["state"] if cache else None)
     y = y + p["D"].astype(jnp.float32)[:, None] * xh
     y = y.reshape(*x.shape[:2], d_inner)
     y = _gated_rmsnorm(y.astype(cdt), z.astype(cdt), p["norm_scale"])
@@ -170,13 +184,15 @@ def ssd_forward(x, p, cfg, *, return_cache: bool = False):
     if return_cache:
         # conv ring holds the last conv_width *raw* xBC projections.
         raw = zxbcdt[..., d_inner: 2 * d_inner + 2 * s.d_state]
+        if cache is not None:
+            raw = jnp.concatenate(
+                [cache["conv"].astype(jnp.float32), raw], axis=1)
         w = s.conv_width
         tail = raw[:, -w:]
         pad = w - tail.shape[1]
         if pad > 0:
             tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
-        cache = {"state": final_state, "conv": tail.astype(cdt)}
-        return out, cache
+        return out, {"state": final_state, "conv": tail.astype(cdt)}
     return out
 
 

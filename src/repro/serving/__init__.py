@@ -4,20 +4,30 @@ Three layers, policy separated from mechanism:
 
 - :mod:`repro.serving.kv_cache` — :class:`KVPagePool`, the paged KV-cache
   allocator: fixed-size pages from a shared free list, per-request growth
-  with no recompaction, physical page 0 reserved as the null page.  Pure
-  host-side bookkeeping; the device-side page arrays live in the model
-  cache (``models.model.init_paged_cache``) and are quantized under a
+  with no recompaction, physical page 0 reserved as the null page.
+  Pages are *refcounted* and *content-addressed*
+  (:func:`~repro.serving.kv_cache.page_prefix_hashes`): requests sharing
+  a page-aligned prompt prefix alias the same physical pages, eviction
+  decrements shared pages instead of freeing them, ref-0 pages keep
+  their content on an LRU cached-free list until reclaimed, and
+  ``make_private`` is the copy-on-write escape hatch.  Pure host-side
+  bookkeeping; the device-side page arrays live in the model cache
+  (``models.model.init_paged_cache``) and are quantized under a
   ``FormatPolicy`` (``int8pt`` per-tensor-scale int8 is the quantized
   default).
 - :mod:`repro.serving.scheduler` — :class:`ContinuousBatchingScheduler`,
   the admit → prefill → decode → evict policy loop: strict-FIFO admission
   by arrival stamp (starvation-free; preempted requests keep their
-  stamp), token-budget admission control, youngest-first eviction when
-  the pool runs dry, occupancy/throughput metrics.  Subclass its
-  ``_pick_admit`` / ``_pick_victim`` hooks to add a scheduling policy.
+  stamp), prefix-cached admission (alias the longest cached chunk-aligned
+  prefix, recompute only the suffix), token-budget admission control,
+  youngest-first eviction when the pool runs dry, occupancy/throughput/
+  hit-rate metrics.  Subclass its ``_pick_admit`` / ``_pick_victim`` /
+  ``prefill_chunk_quota`` hooks to add a scheduling policy.
 - :mod:`repro.serving.engine` — :class:`ServingEngine`, the model-side
-  executor: per-request prefill (jitted per format), one batched decode
-  over fixed slots reading KV through the page table (the
+  executor: chunked prefill (fixed-size prompt chunks written straight
+  into pool pages, jitted once per (format, chunk index), interleaved
+  with decode steps so long prompts never stall in-flight decodes), one
+  batched decode over fixed slots reading KV through the page table (the
   page-table-indexed flash-decode kernel on the pallas backend), grouped
   decode-GEMV projections (one plan-cache signature per step), GEMM
   plan-cache warm start/save.

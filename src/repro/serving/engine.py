@@ -4,13 +4,40 @@ The engine is the model-side half of the serving subsystem:
 
 - :class:`~repro.serving.scheduler.ContinuousBatchingScheduler` owns
   every *policy* decision — FIFO admission by token budget, page-pool
-  growth, preemption/eviction (see its docstring for the
-  admit → prefill → decode → evict loop);
-- this class owns params, compiled steps and device state: per-request
-  prefill (jitted once per format, memoized), ONE batched decode over the
-  fixed slot capacity (static shapes — request churn never recompiles),
-  and the paged KV cache (``models.init_paged_cache``) the decode reads
-  through the scheduler's page table.
+  growth, prefix aliasing, preemption/eviction (see its docstring for
+  the admit → prefill → decode → evict loop);
+- this class owns params, compiled steps and device state: chunked
+  prefill (jitted once per (format, chunk index), memoized), ONE batched
+  decode over the fixed slot capacity (static shapes — request churn
+  never recompiles), and the paged KV cache
+  (``models.init_paged_cache``) both read through the scheduler's page
+  table.
+
+**Chunked prefill**: a prompt is prefilled in fixed-size
+``prefill_chunk`` chunks (default: the whole ``prefill_len`` window)
+that write their KV *directly* into the request's pool pages
+(``models.prefill_chunk``) and are interleaved with the batched decode
+step — each engine step runs up to
+``scheduler.prefill_chunk_quota(n_decoding)`` chunks, then the decode
+batch, so a long prompt never stalls in-flight decodes and every prefill
+GEMM arrives at the plan cache as the one (chunk, d_model) signature
+instead of a per-prompt-length zoo.
+
+**Prefix caching**: with ``prefix_cache=True`` (the default) each
+admission hashes its prefill window page-by-page
+(:func:`repro.serving.kv_cache.page_prefix_hashes` — chained over the
+whole prefix plus a precision salt, so a hit implies identical tokens at
+identical positions under identical formats) and aliases the longest
+cached chunk-aligned prefix out of the pool instead of recomputing it:
+only the uncached suffix chunks run.  The hit path re-reads cached KV
+through the page table — it never approximates it, so fp32 outputs are
+bit-identical with the cache on or off.  Pages are refcounted; eviction
+decrements, never frees, shared pages, and an evicted request re-attaches
+to its own published pages on resume.  Prefix caching engages only when
+every mixer layer is global attention (ring/recurrent prefix state is
+not pageable) and ``prefill_chunk`` divides the window into ≥ 2
+page-aligned chunks (the final chunk always recomputes — its logits seed
+sampling).
 
 KV storage: global-attention layers hold fixed-size pages from a shared
 pool, quantized under ``kv_format`` (a
@@ -18,12 +45,13 @@ pool, quantized under ``kv_format`` (a
 int8 is the default whenever the config asks for a quantized cache,
 ``None`` stores raw compute-dtype pages).  Sequences grow page-by-page
 with no recompaction; when the pool runs dry the scheduler evicts the
-youngest-arrival request (its pages return to the pool, the request
-re-enters the queue with its original arrival stamp and resumes later by
-re-prefilling the last ``prefill_len`` tokens of its prompt + generated
-prefix — the same static truncation window every admission applies, so
-under pool pressure a long resumed request continues from a truncated
-context, exactly as an equally long fresh prompt would).
+youngest-arrival request (its private pages return to the pool, shared
+pages are decremented, the request re-enters the queue with its original
+arrival stamp and resumes later by re-prefilling the last
+``prefill_len`` tokens of its prompt + generated prefix — the same
+static truncation window every admission applies, so under pool pressure
+a long resumed request continues from a truncated context, exactly as an
+equally long fresh prompt would).
 
 Decode GEMVs: with ``grouped_qkv`` (default on the pallas backend) the
 q/k/v projections of a decode step run as ONE grouped GEMM, so the plan
@@ -50,6 +78,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
+from repro.serving.kv_cache import page_prefix_hashes
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
 __all__ = ["Request", "ServingEngine"]
@@ -109,7 +138,9 @@ class ServingEngine:
                  kv_format: Optional[str] = None,
                  token_budget: Optional[int] = None,
                  grouped_qkv: Optional[bool] = None,
-                 scheduler_cls=None):
+                 scheduler_cls=None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -121,7 +152,7 @@ class ServingEngine:
             grouped_qkv = (cfg.gemm_backend == "pallas"
                            or cfg.decode_qkv_grouped)
         # Paged storage replaces the legacy contiguous cache_quant slots;
-        # prefill stays full-precision and is quantized at page-write time.
+        # prefill is chunked and quantizes at page-write time.
         from repro.core.geometry import cdiv
         cache_len = cdiv(cache_len, page_size) * page_size
         cfg = dataclasses.replace(cfg, cache_quant=False,
@@ -148,6 +179,25 @@ class ServingEngine:
         self.cache_len = cache_len
         self.prefill_len = prefill_len
         self.page_size = page_size
+        if prefill_chunk is None:
+            prefill_chunk = prefill_len
+        if prefill_len % prefill_chunk != 0:
+            raise ValueError(
+                f"prefill_chunk ({prefill_chunk}) must divide "
+                f"prefill_len ({prefill_len}): chunks are the static "
+                f"prefill shape")
+        self.prefill_chunk = int(prefill_chunk)
+        self.n_chunks = prefill_len // self.prefill_chunk
+        # Prefix caching needs page-aligned chunks, at least one chunk of
+        # aliasable prefix ahead of the always-recomputed final chunk,
+        # and a fully paged prefix (every mixer a global-attention layer:
+        # ring/recurrent prefix state cannot be aliased out of the pool).
+        self.prefix_cache = bool(prefix_cache)
+        self._prefix_active = (
+            self.prefix_cache
+            and self.prefill_chunk % page_size == 0
+            and prefill_len >= 2 * self.prefill_chunk
+            and all(kind[0] == "attn" for kind in cfg.layer_kinds))
         self._key = jax.random.PRNGKey(seed)
 
         # A scheduling policy drops in by class (see ROADMAP "Serving
@@ -156,19 +206,31 @@ class ServingEngine:
         scheduler_cls = scheduler_cls or ContinuousBatchingScheduler
         self.sched = scheduler_cls(
             slots=slots, max_seq_len=cache_len, page_size=page_size,
-            num_pages=num_pages, token_budget=token_budget)
+            num_pages=num_pages, token_budget=token_budget,
+            prefill_chunk=self.prefill_chunk)
         self.cache = model_lib.init_paged_cache(
             cfg, slots, cache_len, num_pages=self.sched.pool.num_pages,
             page_size=page_size)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self.completed: List[Request] = []
+        # Ring/recurrent layers keep per-slot rows the batched decode
+        # rewrites for EVERY row — a still-prefilling slot's carried
+        # chunk state must be restored after each decode step.
+        self._stateful_rows = any(kind[0] != "attn"
+                                  for kind in cfg.layer_kinds)
+        # slot -> in-flight chunked-prefill state
+        # {"tokens": (prefill_len,) window, "chunk": next chunk index,
+        #  "hashes": the window's page-prefix hashes (None: prefix off)}
+        self._prefilling: Dict[int, dict] = {}
 
-        # One prefill per format (lazily jitted, memoized); one batched
-        # decode under the engine-level format.
-        self._prefill_fns: Dict[Optional[str], object] = {}
+        # One jitted prefill-chunk program per (format, chunk index) —
+        # outer dict keyed by format policy (None = engine default), so
+        # a request-supplied format compiles its own chunk pipeline once.
+        self._prefill_fns: Dict[Optional[str], Dict[int, object]] = {}
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
+        self._restore_jit = None
 
     @property
     def queue(self) -> List[Request]:
@@ -176,19 +238,22 @@ class ServingEngine:
         return [e.req for e in
                 sorted(self.sched.waiting, key=lambda e: e.arrival)]
 
-    def _prefill_fn(self, format_policy: Optional[str]):
-        """The jitted prefill for one format policy (engine default on
-        ``None``).  Compiled once per distinct format, then reused."""
+    def _chunk_fn(self, format_policy: Optional[str], chunk_idx: int):
+        """The jitted prefill-chunk program for one (format, chunk
+        index).  Compiled once per pair, then reused — all chunk indices
+        share the same GEMM shapes, so the plan cache solves them once."""
         if format_policy == self.cfg.format_policy:
             format_policy = None  # engine default: share its compilation
-        fn = self._prefill_fns.get(format_policy)
+        per_fmt = self._prefill_fns.setdefault(format_policy, {})
+        fn = per_fmt.get(chunk_idx)
         if fn is None:
             cfg = (dataclasses.replace(self.cfg,
                                        format_policy=format_policy)
                    if format_policy is not None else self.cfg)
-            fn = jax.jit(lambda p, b: model_lib.prefill(
-                p, b, cfg, cache_len=self.cache_len))
-            self._prefill_fns[format_policy] = fn
+            pos0 = chunk_idx * self.prefill_chunk
+            fn = jax.jit(lambda p, b, c, _cfg=cfg, _p0=pos0:
+                         model_lib.prefill_chunk(p, b, c, _cfg, pos0=_p0))
+            per_fmt[chunk_idx] = fn
         return fn
 
     # -- client API -----------------------------------------------------------
@@ -227,82 +292,127 @@ class ServingEngine:
         return {r.rid: r.output for r in self.completed + live}
 
     def metrics(self) -> Dict[str, float]:
-        """Scheduler counters (occupancy, token split, preemptions) plus
-        engine-level shape facts — the serving-throughput inputs."""
+        """Scheduler counters (occupancy, token split, preemptions,
+        prefix hit rate) plus pool sharing state and engine-level shape
+        facts — the serving-throughput / serving-prefix inputs."""
         m = dict(self.sched.metrics())
+        pool = self.sched.pool
         m.update(slots=self.slots, page_size=self.page_size,
-                 num_pages=self.sched.pool.num_pages,
-                 free_pages=self.sched.pool.free_pages,
-                 kv_format=self.cfg.kv_cache_format or "none")
+                 num_pages=pool.num_pages,
+                 free_pages=pool.free_pages,
+                 kv_format=self.cfg.kv_cache_format or "none",
+                 prefix_cache=int(self._prefix_active),
+                 prefill_chunk=self.prefill_chunk,
+                 prefix_queries=pool.prefix_queries,
+                 prefix_hit_pages=pool.prefix_hit_pages,
+                 shared_pages=pool.shared_pages,
+                 cached_pages=pool.cached_pages,
+                 cow_copies=pool.cow_copies)
         return m
 
     # -- scheduler ------------------------------------------------------------
+    def _window_tokens(self, req: Request) -> np.ndarray:
+        """The request's static prefill window: the last ``prefill_len``
+        tokens of prompt + generated output (resumption is position-
+        rebased), left-padded to the fixed shape."""
+        context = np.asarray(req.prompt, np.int32).ravel()
+        if req.output:  # resuming a preempted request
+            context = np.concatenate(
+                [context, np.asarray(req.output, np.int32)])
+        prompt = context[-self.prefill_len:]
+        pad = self.prefill_len - len(prompt)
+        return np.pad(prompt, (pad, 0))  # left-pad to static shape
+
+    def _hasher(self, entry) -> List[str]:
+        """Content hashes of an entry's prefill window.  The salt folds
+        in every knob that changes the *stored bytes* a window produces:
+        the prefill compute format and the KV storage format — two
+        requests may only share pages when both match.  The window is
+        stashed on the entry so admission reuses it (the scheduler
+        memoizes the result until a preemption changes the window)."""
+        req = entry.req
+        fmt = req.format_policy or self.cfg.format_policy
+        salt = f"{self.cfg.name}|{fmt}|{self.cfg.kv_cache_format}"
+        entry.window = self._window_tokens(req)
+        return page_prefix_hashes(entry.window, self.page_size, salt)
+
     def _admit(self):
         """Admit the longest-waiting requests while capacity allows.
 
         FIFO fairness: the scheduler considers only the minimum-arrival
         waiting request (a preempted request keeps its original stamp, so
         it re-enters at the *front* of the line, not behind requests
-        submitted after it).  Admission runs the request's prefill —
-        resumed requests re-prefill prompt + already-generated tokens —
-        and scatters the prefill KV into the allocated pages.
+        submitted after it).  Admission allocates pages — aliasing the
+        longest cached prefix when prefix caching is on — and queues the
+        uncached suffix for chunked prefill; the chunks themselves run
+        inside :meth:`step`, interleaved with decodes.
         """
+        hasher = self._hasher if self._prefix_active else None
         while True:
-            got = self.sched.pop_admit(self.prefill_len)
+            got = self.sched.pop_admit(self.prefill_len, hasher)
             if got is None:
                 return
-            slot, entry = got
+            slot, entry, cached_tok = got
             req = entry.req
-            context = np.asarray(req.prompt, np.int32).ravel()
-            if req.output:  # resuming a preempted request
-                context = np.concatenate(
-                    [context, np.asarray(req.output, np.int32)])
-            prompt = context[-self.prefill_len:]
-            pad = self.prefill_len - len(prompt)
-            tokens = np.pad(prompt, (pad, 0))  # left-pad to static shape
-            logits, cache_one = self._prefill_fn(req.format_policy)(
-                self.params, {"tokens": jnp.asarray(tokens[None])})
-            tok = self._sample(logits, req)[0]
-            req.output.append(int(tok))
-            self._write_admitted(slot, cache_one,
-                                 self.sched.pool.pages_of(entry.arrival))
             self.slot_req[slot] = req
-            self.slot_pos[slot] = self.prefill_len
-            self._finished(slot)
+            self.slot_pos[slot] = 0
+            window = (entry.window if entry.window is not None
+                      else self._window_tokens(req))
+            self._prefilling[slot] = {
+                "tokens": window,
+                "chunk": cached_tok // self.prefill_chunk,
+                "hashes": entry.hashes,
+            }
 
     def step(self):
-        """One batched decode step over all slots.
+        """One engine step: up to ``prefill_chunk_quota`` prefill chunks,
+        then ONE batched decode over the decoding slots.
 
-        Before the step, every active sequence's page coverage for its
-        next token is guaranteed (growing into the shared pool, evicting
-        the youngest request when the pool runs dry).  Per-slot positions
-        ride in ``pos`` (B,) and the page table in
+        Chunks run first so a slot finishing its prefill joins the same
+        step's decode batch (single-chunk prefills behave exactly like
+        the old monolithic admission).  Before the decode, every decoding
+        sequence's page coverage for its next token is guaranteed
+        (growing into the shared pool, evicting the youngest request when
+        the pool runs dry — shared pages are only decremented).  Per-slot
+        positions ride in ``pos`` (B,) and the page table in
         ``batch["page_table"]`` — slots at different depths decode
-        together with static shapes, so no recompiles.
+        together with static shapes, so no recompiles; still-prefilling
+        slots ride along masked (all-(−1) table rows scribble their
+        garbage token into the reserved null page).
         """
+        self._run_prefill_chunks()
         for slot in list(self.sched.active):
-            if self.slot_req[slot] is None:
+            if self.slot_req[slot] is None or slot in self._prefilling:
                 continue
             evicted = self.sched.ensure_decode(
                 slot, int(self.slot_pos[slot]) + 1)
             for vslot, _ventry in evicted:
-                self.slot_req[vslot] = None
-                self.slot_pos[vslot] = 0
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+                self._clear_slot(vslot)
+        decoding = [s for s, r in enumerate(self.slot_req)
+                    if r is not None and s not in self._prefilling]
+        if not decoding:
             return
+        for slot in decoding:
+            self._cow_guard(slot)
         tokens = np.zeros((self.slots, 1), np.int32)
-        for slot, req in enumerate(self.slot_req):
-            if req is not None and req.output:
+        table = np.full((self.slots, self.sched.max_pages_per_seq), -1,
+                        np.int32)
+        for slot in decoding:
+            req = self.slot_req[slot]
+            if req.output:
                 tokens[slot, 0] = req.output[-1]
-        table = np.stack([self.sched.table_row(s)
-                          for s in range(self.slots)])
+            table[slot] = self.sched.table_row(slot)
+        prev_cache = (self.cache if (self._prefilling
+                                     and self._stateful_rows) else None)
         logits, self.cache = self._decode(
             self.params, {"tokens": jnp.asarray(tokens),
                           "pos": jnp.asarray(self.slot_pos),
                           "page_table": jnp.asarray(table)}, self.cache)
-        self.sched.note_step(len(active))
-        for slot, req in enumerate(self.slot_req):
+        if prev_cache is not None:
+            self._restore_prefilling_rows(prev_cache)
+        self.sched.note_step(len(decoding))
+        for slot in decoding:
+            req = self.slot_req[slot]
             if req is None:
                 continue
             tok = int(self._sample(logits[slot: slot + 1], req)[0])
@@ -318,7 +428,124 @@ class ServingEngine:
                 self.slot_pos[slot] = 0
                 self.sched.release(slot, finished=True)
 
+    # -- chunked prefill -------------------------------------------------------
+    def _run_prefill_chunks(self):
+        """Advance in-flight prefills by up to the scheduler's chunk
+        quota, oldest arrival first (chunks are budgeted like decode
+        tokens — the policy hook rides next to ``_pick_admit``)."""
+        if not self._prefilling:
+            return
+        n_decoding = sum(1 for s, r in enumerate(self.slot_req)
+                         if r is not None and s not in self._prefilling)
+        quota = max(1, int(self.sched.prefill_chunk_quota(n_decoding)))
+        for _ in range(quota):
+            if not self._prefilling:
+                return
+            slot = min(self._prefilling,
+                       key=lambda s: self.sched.active[s].arrival)
+            self._advance_prefill(slot)
+
+    def _advance_prefill(self, slot: int):
+        """Run ONE prompt chunk for ``slot`` straight into its pool
+        pages; the final chunk's logits seed the first sampled token."""
+        st = self._prefilling[slot]
+        req = self.slot_req[slot]
+        c = st["chunk"]
+        size = self.prefill_chunk
+        toks = st["tokens"][c * size:(c + 1) * size]
+        batch = {"tokens": jnp.asarray(toks[None]),
+                 "page_table": jnp.asarray(self.sched.table_row(slot)[None]),
+                 "slot": jnp.int32(slot)}
+        logits, self.cache = self._chunk_fn(req.format_policy, c)(
+            self.params, batch, self.cache)
+        # Publish the chunk's fully-written pages to the prefix cache —
+        # only now: an eviction mid-prefill must never leave a
+        # half-written page findable.
+        if st["hashes"] is not None and size % self.page_size == 0:
+            per_chunk = size // self.page_size
+            for j in range(c * per_chunk, (c + 1) * per_chunk):
+                self.sched.register_prefix(slot, j, st["hashes"][j])
+        st["chunk"] = c + 1
+        if st["chunk"] >= self.n_chunks:
+            del self._prefilling[slot]
+            tok = int(self._sample(logits, req)[0])
+            req.output.append(tok)
+            self.slot_pos[slot] = self.prefill_len
+            self._finished(slot)
+
     # -- helpers ---------------------------------------------------------------
+    def _restore_prefilling_rows(self, prev):
+        """Undo the batched decode's garbage writes to the ring/recurrent
+        rows of still-prefilling slots (paged layers are safe — masked
+        table rows scribble into the reserved null page, these rows have
+        no mask to hide behind).  One jitted program per distinct slot
+        count — a single fused dispatch on the decode hot path, not a
+        per-leaf eager loop."""
+        if self._restore_jit is None:
+            def go(cur, old, idx):
+                def fix(c, o, grouped):
+                    if isinstance(c, dict) and "k_pages" in c:
+                        return c
+                    return jax.tree.map(
+                        lambda cl, ol: (cl.at[:, idx].set(ol[:, idx])
+                                        if grouped
+                                        else cl.at[idx].set(ol[idx])),
+                        c, o)
+
+                groups = cur["groups"]
+                if groups is not None:
+                    groups = tuple(fix(c, o, True)
+                                   for c, o in zip(groups, old["groups"]))
+                tail = [fix(c, o, False)
+                        for c, o in zip(cur["tail"], old["tail"])]
+                return {"groups": groups, "tail": tail}
+
+            self._restore_jit = jax.jit(go)
+        idx = jnp.asarray(sorted(self._prefilling), jnp.int32)
+        self.cache = self._restore_jit(self.cache, prev, idx)
+
+    def _clear_slot(self, slot: int):
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        self._prefilling.pop(slot, None)
+
+    def _cow_guard(self, slot: int):
+        """Copy-on-write: decode is about to write ``slot``'s next token
+        into logical page pos // page_size — if that physical page is
+        shared (refcount > 1), re-own it onto a fresh page and copy the
+        device-side content first.  Structurally unreachable under the
+        chunk-aligned aliasing cap (shared pages always precede the
+        recompute window, decode writes always follow it), but enforced
+        rather than assumed."""
+        entry = self.sched.active.get(slot)
+        if entry is None:
+            return
+        idx = int(self.slot_pos[slot]) // self.page_size
+        pages = self.sched.pool.pages_of(entry.arrival)
+        if idx >= len(pages) or self.sched.pool.ref_of(pages[idx]) <= 1:
+            return
+        old, new = self.sched.pool.make_private(entry.arrival, idx)
+        self._copy_page(old, new)
+
+    def _copy_page(self, old: int, new: int):
+        """Duplicate one physical page's content across every paged
+        layer slab (grouped slabs carry the page axis after the group
+        axis)."""
+        def cp(layer, grouped):
+            if not (isinstance(layer, dict) and "k_pages" in layer):
+                return layer
+            out = dict(layer)
+            for name, leaf in layer.items():
+                out[name] = (leaf.at[:, new].set(leaf[:, old]) if grouped
+                             else leaf.at[new].set(leaf[old]))
+            return out
+
+        groups = self.cache["groups"]
+        if groups is not None:
+            groups = tuple(cp(layer, True) for layer in groups)
+        tail = [cp(layer, False) for layer in self.cache["tail"]]
+        self.cache = {"groups": groups, "tail": tail}
+
     def _sample(self, logits, req: Request):
         if req.temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1))
@@ -339,73 +566,3 @@ class ServingEngine:
             self.sched.release(slot, finished=True)
             return True
         return False
-
-    def _write_admitted(self, slot: int, cache_one, page_ids):
-        """Copy a single-sequence prefill cache into the batch state.
-
-        Paged attention layers scatter their prompt KV (quantized under
-        ``kv_format``) into the request's allocated physical pages; ring /
-        recurrent layers dynamic-update batch row ``slot``.  Cache leaves
-        are either group-stacked (G, B, ...) — batch at axis 1 — or
-        per-tail-layer (B, ...) — batch at axis 0.
-        """
-        ids = jnp.asarray(np.asarray(page_ids, np.int32))
-
-        def write_layer(dec, pre, grouped):
-            if isinstance(dec, dict) and "k_pages" in dec:
-                return self._write_pages(dec, pre, ids, grouped)
-            axis = 1 if grouped else 0
-            return jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=axis),
-                dec, pre)
-
-        new_groups = None
-        if self.cache["groups"] is not None:
-            new_groups = tuple(
-                write_layer(d, pc, True)
-                for d, pc in zip(self.cache["groups"], cache_one["groups"]))
-        new_tail = [write_layer(d, pc, False)
-                    for d, pc in zip(self.cache["tail"], cache_one["tail"])]
-        self.cache = {"groups": new_groups, "tail": new_tail}
-
-    def _write_pages(self, dec, pre, ids, grouped: bool):
-        """Scatter one layer's contiguous prefill KV into its pages.
-
-        ``pre`` holds (…, 1, S, kv, hd) contiguous prefill K/V; the first
-        ``len(ids)`` logical pages (covering the prompt) land in physical
-        pages ``ids`` — the same ids across all layers/groups, since the
-        page table is shared by the whole stack.
-        """
-        from repro.core.formats import resolve_format
-        from repro.models import attention as attn_mod
-        page = self.page_size
-        n = ids.shape[0]
-        fmt = (resolve_format(self.cfg.kv_cache_format)
-               if self.cfg.kv_cache_format is not None else None)
-
-        def pack(x):
-            x = x[:, 0] if grouped else x[0]     # drop the B=1 axis
-            s_ax = x.ndim - 3                    # the seq axis
-            x = jax.lax.slice_in_dim(x, 0, n * page, axis=s_ax)
-            lead = x.shape[:s_ax]
-            return x.reshape(*lead, n, page, *x.shape[s_ax + 1:])
-
-        out = dict(dec)
-        for name in ("k", "v"):
-            src = pack(pre[name])
-            if fmt is not None:
-                q, sc = attn_mod.quantize_kv(src, fmt)
-            else:
-                q, sc = src, None
-            pages_key, scale_key = name + "_pages", name + "_scale"
-            q = q.astype(dec[pages_key].dtype)
-            if grouped:
-                out[pages_key] = dec[pages_key].at[:, ids].set(q)
-                if sc is not None:
-                    out[scale_key] = dec[scale_key].at[:, ids].set(sc)
-            else:
-                out[pages_key] = dec[pages_key].at[ids].set(q)
-                if sc is not None:
-                    out[scale_key] = dec[scale_key].at[ids].set(sc)
-        return out

@@ -1,4 +1,5 @@
-"""Paged KV-cache pool: fixed-size pages from a shared free list.
+"""Paged KV-cache pool: refcounted, content-addressed pages from a shared
+free list.
 
 The decode-GEMV regime the paper targets is dominated by KV-cache traffic,
 and a fixed-slot cache (one ``cache_len`` stripe per slot) wastes most of
@@ -12,6 +13,25 @@ This module implements the vLLM-style answer at the framework level:
 - **growth without recompaction**: appending tokens allocates pages from
   the free list; already-granted physical page ids never move, so decode
   steps never copy KV (the page table is the only thing that changes).
+- **refcounted prefix sharing**: a physical page may be referenced by
+  several sequences at once.  Every grant bumps the page's refcount;
+  :meth:`release` decrements and only a count of zero makes the page
+  reclaimable — evicting one sharer can never free pages another sharer
+  still reads.  :meth:`make_private` is the copy-on-write primitive: it
+  re-owns one logical page of a sequence onto a fresh physical page so
+  the caller can write without disturbing the other sharers.
+- **content-hash index**: :meth:`register` records a *chained* content
+  hash for a fully-written page (see :func:`page_prefix_hashes` — the
+  hash of logical page ``i`` covers every token in ``[0, (i+1)·page)``
+  plus the storage/compute format salt, so a hash match implies the same
+  tokens at the same absolute positions under the same precision, which
+  is exactly what makes cached RoPE'd KV reusable).  :meth:`lookup_prefix`
+  finds the longest cached page-aligned prefix; :meth:`admit_prefix`
+  aliases it into a new sequence.  Pages whose refcount drops to zero
+  *keep* their content on an LRU "cached-free" list: they stay findable
+  until the allocator reclaims them for fresh writes, so a prefix
+  survives its last sharer (and an evicted request finds its own pages
+  again on resume).
 - **quantized storage**: the stored element format is a
   :class:`repro.core.formats.FormatPolicy` (``int8pt`` per-tensor-scale
   int8 is the quantized default — one f32 scale per stored token; ``int8``
@@ -26,18 +46,37 @@ write their garbage token into it, so it must never be granted to a
 request.
 
 The scheduler (:mod:`repro.serving.scheduler`) decides *when* to
-allocate/evict; this class only answers "can I?" and "do it".
+allocate/evict/alias; this class only answers "can I?" and "do it".
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Deque, Dict, List, Optional
+import hashlib
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.geometry import cdiv
 
-__all__ = ["KVPagePool"]
+__all__ = ["KVPagePool", "page_prefix_hashes"]
+
+
+def page_prefix_hashes(tokens, page_size: int, salt: str = "") -> List[str]:
+    """Chained content hashes for the page-aligned prefixes of ``tokens``.
+
+    Entry ``i`` digests ``salt`` plus every token in ``[0, (i+1)·page)``
+    (by chaining, not by re-reading — O(n) total), so two sequences share
+    hash ``i`` iff they agree on the *whole* prefix through page ``i``
+    under the same format salt.  Only full pages get a hash: the partial
+    tail of a window is never shareable.
+    """
+    h = hashlib.blake2b(str(salt).encode(), digest_size=16)
+    arr = np.ascontiguousarray(np.asarray(tokens, np.int32).ravel())
+    out: List[str] = []
+    for i in range(len(arr) // page_size):
+        h.update(arr[i * page_size:(i + 1) * page_size].tobytes())
+        out.append(h.hexdigest())
+    return out
 
 
 class KVPagePool:
@@ -54,53 +93,210 @@ class KVPagePool:
         # Page 0 is the null page — never granted.
         self._free: Deque[int] = deque(range(1, self.num_pages))
         self._owned: Dict[int, List[int]] = {}
+        # -- sharing state ----------------------------------------------------
+        self._ref: Dict[int, int] = {}          # page -> #sequences holding it
+        self._hash_of: Dict[int, str] = {}      # page -> registered hash
+        self._page_of: Dict[str, int] = {}      # hash -> page
+        # ref-0 pages that still hold registered content, LRU order —
+        # allocatable, but only after the plain free list runs dry.
+        self._cached_free: "OrderedDict[int, None]" = OrderedDict()
+        # -- metrics ----------------------------------------------------------
+        self.prefix_queries = 0     # admissions that consulted the index
+        self.prefix_hit_pages = 0   # pages aliased instead of recomputed
+        self.cow_copies = 0         # matched pages re-owned for rewriting
 
     # -- queries ---------------------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Allocatable pages (plain free + reclaimable cached-free)."""
+        return len(self._free) + len(self._cached_free)
 
     @property
     def used_pages(self) -> int:
-        return sum(len(v) for v in self._owned.values())
+        """Distinct physical pages currently referenced by a sequence."""
+        return sum(1 for r in self._ref.values() if r > 0)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently referenced by more than one sequence."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages with a registered content hash (live or cached-free)."""
+        return len(self._page_of)
 
     def pages_needed(self, tokens: int) -> int:
         return cdiv(max(int(tokens), 0), self.page_size)
 
     def can_allocate(self, n_pages: int) -> bool:
-        return len(self._free) >= n_pages
+        return self.free_pages >= n_pages
 
     def pages_of(self, key: int) -> List[int]:
         return list(self._owned.get(key, ()))
 
+    def ref_of(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
     # -- allocation ------------------------------------------------------------
+    def _alloc_page(self) -> Optional[int]:
+        """One fresh page: plain free list first, then LRU-reclaim a
+        cached-free page (dropping its hash registration)."""
+        if self._free:
+            return self._free.popleft()
+        if self._cached_free:
+            page, _ = self._cached_free.popitem(last=False)
+            h = self._hash_of.pop(page, None)
+            if h is not None:
+                self._page_of.pop(h, None)
+            return page
+        return None
+
+    def _retire_page(self, page: int) -> None:
+        """A page whose refcount reached zero: keep it findable if it has
+        registered content, else return it to the plain free list."""
+        if page in self._hash_of:
+            self._cached_free[page] = None
+            self._cached_free.move_to_end(page)
+        else:
+            self._free.append(page)
+
     def ensure(self, key: int, tokens: int) -> bool:
         """Grow ``key``'s page list to cover ``tokens`` token slots.
 
-        Returns False (and changes nothing) when the free list cannot
-        supply the missing pages — the caller decides who to evict.
-        Existing page ids are never moved (no recompaction): growth only
-        appends to the sequence's page list.
+        Returns False (and changes nothing) when the pool cannot supply
+        the missing pages — the caller decides who to evict.  Existing
+        page ids are never moved (no recompaction): growth only appends
+        to the sequence's page list.  New pages start with refcount 1.
         """
         need = self.pages_needed(tokens)
         owned = self._owned.setdefault(key, [])
         grow = need - len(owned)
         if grow <= 0:
             return True
-        if len(self._free) < grow:
+        if self.free_pages < grow:
             return False
-        owned.extend(self._free.popleft() for _ in range(grow))
+        for _ in range(grow):
+            page = self._alloc_page()
+            self._ref[page] = 1
+            owned.append(page)
         return True
 
     def release(self, key: int) -> int:
-        """Return all of ``key``'s pages to the free list; returns count."""
+        """Drop ``key``'s references.  Returns the number of pages whose
+        refcount reached zero (became reclaimable); shared pages are
+        decremented, never freed."""
         pages = self._owned.pop(key, [])
-        self._free.extend(pages)
-        return len(pages)
+        freed = 0
+        for page in pages:
+            r = self._ref.get(page, 1) - 1
+            if r <= 0:
+                self._ref.pop(page, None)
+                self._retire_page(page)
+                freed += 1
+            else:
+                self._ref[page] = r
+        return freed
 
     def reset(self) -> None:
         self._free = deque(range(1, self.num_pages))
         self._owned.clear()
+        self._ref.clear()
+        self._hash_of.clear()
+        self._page_of.clear()
+        self._cached_free.clear()
+
+    # -- prefix caching --------------------------------------------------------
+    def lookup_prefix(self, hashes: Sequence[str]) -> int:
+        """Longest run of leading ``hashes`` present in the content index
+        (in pages).  Touches the LRU order of matched cached-free pages."""
+        n = 0
+        for h in hashes:
+            page = self._page_of.get(h)
+            if page is None:
+                break
+            if page in self._cached_free:
+                self._cached_free.move_to_end(page)
+            n += 1
+        return n
+
+    def admit_prefix(self, key: int, hashes: Sequence[str],
+                     keep_pages: int, total_tokens: int, *,
+                     rewrite_pages: int = 0) -> bool:
+        """Grant ``key`` pages for ``total_tokens``: alias the first
+        ``keep_pages`` from the content index (refcount bump, no write),
+        allocate the rest fresh.  All-or-nothing: returns False (nothing
+        changed) when the pool cannot supply the fresh pages.
+
+        ``rewrite_pages`` counts index matches the caller chose to re-own
+        privately because it will rewrite them (the chunk-aligned
+        recompute window) — the pool books them as CoW copies: the alias
+        is dropped before the write instead of after, and because the
+        rewrite covers every slot of the page the device-side copy is
+        elided.
+        """
+        need = self.pages_needed(total_tokens)
+        keep_pages = min(int(keep_pages), need)
+        keep = [self._page_of[h] for h in hashes[:keep_pages]]
+        # Fresh capacity: cached-free pages we are about to alias are not
+        # reclaimable for the same admission.
+        reclaimable = (len(self._free) + len(self._cached_free)
+                       - sum(1 for p in keep if p in self._cached_free))
+        if need - keep_pages > reclaimable:
+            return False
+        owned = []
+        for page in keep:
+            self._cached_free.pop(page, None)
+            self._ref[page] = self._ref.get(page, 0) + 1
+            owned.append(page)
+        for _ in range(need - keep_pages):
+            page = self._alloc_page()
+            self._ref[page] = 1
+            owned.append(page)
+        self._owned[key] = owned
+        self.prefix_queries += 1 if hashes else 0
+        self.prefix_hit_pages += keep_pages
+        self.cow_copies += max(0, int(rewrite_pages))
+        return True
+
+    def register(self, key: int, index: int, page_hash: str) -> bool:
+        """Record the content hash of ``key``'s fully-written logical page
+        ``index`` so later admissions can alias it.  First writer wins: a
+        hash already registered (or a page already hashed) is left alone —
+        the duplicate page simply stays private."""
+        pages = self._owned.get(key, ())
+        if index >= len(pages):
+            return False
+        page = pages[index]
+        if page_hash in self._page_of or page in self._hash_of:
+            return False
+        self._page_of[page_hash] = page
+        self._hash_of[page] = page_hash
+        return True
+
+    def make_private(self, key: int, index: int) -> Optional[tuple]:
+        """Copy-on-write: re-own ``key``'s logical page ``index`` onto a
+        fresh physical page when it is shared.  Returns ``(old, new)``
+        physical ids so the caller can copy the device-side content, or
+        None when the page was already private (no copy needed).  Raises
+        when the pool cannot supply the private copy — the caller should
+        have evicted first.
+        """
+        pages = self._owned.get(key)
+        if pages is None or index >= len(pages):
+            return None
+        old = pages[index]
+        if self._ref.get(old, 1) <= 1:
+            return None
+        new = self._alloc_page()
+        if new is None:
+            raise RuntimeError("KVPagePool: no page available for the "
+                               "copy-on-write split — evict before writing")
+        self._ref[old] -= 1
+        self._ref[new] = 1
+        pages[index] = new
+        self.cow_copies += 1
+        return old, new
 
     # -- device-side view ------------------------------------------------------
     def table_row(self, key: Optional[int], max_pages: int) -> np.ndarray:
@@ -119,4 +315,8 @@ class KVPagePool:
     def describe(self) -> str:
         return (f"KVPagePool({self.num_pages} pages x {self.page_size} "
                 f"tokens, {self.free_pages} free, "
-                f"{len(self._owned)} sequences)")
+                f"{len(self._owned)} sequences, "
+                f"{self.shared_pages} shared, {self.cached_pages} cached, "
+                f"{self.prefix_hit_pages} prefix hits / "
+                f"{self.prefix_queries} queries, "
+                f"{self.cow_copies} cow copies)")

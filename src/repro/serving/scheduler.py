@@ -15,18 +15,30 @@ the compiled steps; it consults this class for every scheduling decision:
 - **token-budget admission**: ``token_budget`` caps the sum of committed
   token slots (``prefill_len + max_tokens`` per in-flight request) — the
   knob that keeps worst-case KV growth inside the pool.
+- **prefix-cached admission**: when the engine supplies a ``hasher``
+  (page-aligned content hashes of the request's prefill window, see
+  :func:`repro.serving.kv_cache.page_prefix_hashes`), admission aliases
+  the longest cached prefix out of the pool instead of recomputing it.
+  The usable prefix is capped at a *chunk* boundary no later than
+  ``prefill_len − chunk`` — the final chunk is always recomputed because
+  its last-position logits seed sampling — and matched pages inside that
+  recompute window are re-owned privately (booked as CoW copies by the
+  pool) so the rewrite never touches another sharer's pages.
 - **growth / preemption** (:meth:`ensure_decode`): before a decode step
   the engine asks for page coverage of every active sequence's next
   token.  When the pool runs dry the *youngest-arrival* active request is
-  evicted (pages freed, request requeued with its stamp) — the victim
+  evicted (pages whose refcount drops to zero are reclaimed, shared ones
+  only decremented; request requeued with its stamp) — the victim
   closest to the back of the FIFO line, so eviction never inverts
   fairness.
-- **metrics**: per-step occupancy, prefill/decode token counts,
-  preemptions — the numbers ``benchmarks/run.py`` reports as the
-  serving-throughput section.
+- **metrics**: per-step occupancy, prefill/decode token counts (computed
+  vs prefix-cached), preemptions — the numbers ``benchmarks/run.py``
+  reports as the serving-throughput and serving-prefix sections.
 
 Adding a scheduling policy: subclass and override :meth:`_pick_admit`
-(which waiting request next) and/or :meth:`_pick_victim` (who to evict);
+(which waiting request next), :meth:`_pick_victim` (who to evict),
+and/or :meth:`prefill_chunk_quota` (how many prefill chunks ride along
+with each batched decode step — chunks are budgeted like decode tokens);
 everything else — budget accounting, pool interaction, metrics — is
 policy-agnostic.  :class:`DeadlineScheduler` (earliest-deadline-first
 with an aging guard) is the worked example.  See ROADMAP.md "Serving
@@ -36,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.geometry import cdiv
 from repro.serving.kv_cache import KVPagePool
@@ -56,6 +68,14 @@ class ScheduledRequest:
     skipped: int = 0          # admission decisions that bypassed this
     #                           entry while it was the oldest waiting
     #                           (DeadlineScheduler's starvation bound)
+    hashes: Optional[List[str]] = None  # page-prefix content hashes of the
+    #                                     current prefill window, memoized
+    #                                     while the entry waits (the window
+    #                                     only changes on preemption, which
+    #                                     clears them — see requeue)
+    window: Optional[object] = None     # the hashed (prefill_len,) token
+    #                                     window itself (engine-owned; saves
+    #                                     rebuilding it on admission)
 
     @property
     def rid(self) -> int:
@@ -65,7 +85,8 @@ class ScheduledRequest:
 class ContinuousBatchingScheduler:
     def __init__(self, *, slots: int, max_seq_len: int, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.slots = int(slots)
         self.page_size = int(page_size)
         self.max_seq_len = cdiv(max_seq_len, page_size) * page_size
@@ -77,6 +98,10 @@ class ContinuousBatchingScheduler:
             num_pages = self.slots * self.max_pages_per_seq + 1
         self.pool = KVPagePool(num_pages, page_size)
         self.token_budget = token_budget
+        # Prefill-chunk size in tokens (None ⇒ the whole prefill window,
+        # i.e. monolithic-shaped).  Caps how much cached prefix an
+        # admission may alias: the final chunk is always recomputed.
+        self.prefill_chunk = prefill_chunk
         self.waiting: List[ScheduledRequest] = []
         self.active: Dict[int, ScheduledRequest] = {}   # slot -> entry
         self._arrival = itertools.count()
@@ -86,7 +111,8 @@ class ContinuousBatchingScheduler:
         # metrics
         self.decode_steps = 0
         self.active_step_sum = 0
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0          # prefill tokens actually computed
+        self.cached_prefill_tokens = 0   # prefill tokens served by aliasing
         self.decode_tokens = 0
         self.preemptions = 0
         self.completed_requests = 0
@@ -99,8 +125,13 @@ class ContinuousBatchingScheduler:
         return entry
 
     def requeue(self, entry: ScheduledRequest) -> None:
-        """Return a preempted entry to the queue, stamp intact."""
+        """Return a preempted entry to the queue, stamp intact.  The
+        preemption is the one event that changes the entry's prefill
+        window (resume re-prefills prompt + generated prefix), so its
+        memoized window/hashes are invalidated here."""
         entry.preemptions += 1
+        entry.hashes = None
+        entry.window = None
         self.preemptions += 1
         self.waiting.append(entry)
         self.events.append(("preempt", entry.rid))
@@ -131,12 +162,50 @@ class ContinuousBatchingScheduler:
             return None
         return max(slots, key=lambda s: self.active[s].arrival)
 
+    def prefill_chunk_quota(self, n_decoding: int) -> int:
+        """Policy hook: how many prefill chunks to run alongside this
+        engine step's batched decode.  Chunks are budgeted like decode
+        tokens — the default interleaves ONE chunk per step so a long
+        prompt never stalls in-flight decodes, and lets prefill drain at
+        full speed when no slot is decoding.  Override together with
+        :meth:`_pick_admit` to trade first-token latency against decode
+        throughput."""
+        return 1 if n_decoding else self.slots
+
     # -- admission -------------------------------------------------------------
-    def pop_admit(self, prefill_len: int
-                  ) -> Optional[Tuple[int, ScheduledRequest]]:
+    def _usable_prefix(self, matched_pages: int, prefill_len: int
+                       ) -> Tuple[int, int]:
+        """(aliasable pages, matched-but-rewritten pages) for a content
+        match of ``matched_pages``.  The usable prefix is rounded down to
+        a chunk boundary and capped at ``prefill_len − chunk``: the final
+        chunk always recomputes (its logits seed sampling), and a chunk
+        never starts mid-page.  Matches past the cap fall in the
+        recompute window — the pool books them as CoW copies."""
+        chunk = self.prefill_chunk or prefill_len
+        if chunk % self.page_size != 0:
+            return 0, 0  # chunk writes straddle pages: nothing aliasable
+        keep_tok = min(matched_pages * self.page_size,
+                       max(prefill_len - chunk, 0))
+        keep_tok -= keep_tok % chunk
+        keep_pages = keep_tok // self.page_size
+        total = self.pool.pages_needed(prefill_len)
+        rewrite = max(0, min(matched_pages, total) - keep_pages)
+        return keep_pages, rewrite
+
+    def pop_admit(self, prefill_len: int,
+                  hasher: Optional[Callable[[ScheduledRequest],
+                                            List[str]]] = None
+                  ) -> Optional[Tuple[int, ScheduledRequest, int]]:
         """Admit the longest-waiting request if a slot, the token budget
         and the page pool allow it.  Strict FIFO: a blocked head blocks
-        the whole queue (starvation-freedom over throughput)."""
+        the whole queue (starvation-freedom over throughput).
+
+        ``hasher`` (engine-supplied) maps an entry to the content hashes
+        of its prefill window; when given, the admission aliases the
+        longest usable cached prefix instead of allocating/recomputing
+        it.  Returns ``(slot, entry, cached_tokens)`` — ``cached_tokens``
+        tells the engine where chunked prefill starts.
+        """
         if not self.waiting:
             return None
         free = self.free_slots()
@@ -148,14 +217,32 @@ class ContinuousBatchingScheduler:
                 and self._committed_tokens(prefill_len) + cost
                 > self.token_budget):
             return None
-        if not self.pool.ensure(head.arrival, prefill_len):
+        keep_pages = rewrite = 0
+        if hasher is not None:
+            if head.hashes is None:  # memoized until preemption clears it
+                head.hashes = list(hasher(head))
+            matched = self.pool.lookup_prefix(head.hashes)
+            keep_pages, rewrite = self._usable_prefix(matched, prefill_len)
+        if not self.pool.admit_prefix(head.arrival, head.hashes or [],
+                                      keep_pages, prefill_len,
+                                      rewrite_pages=rewrite):
             return None
         slot = free[0]
         self.waiting.remove(head)
         self.active[slot] = head
-        self.prefill_tokens += prefill_len
+        cached_tok = keep_pages * self.page_size
+        self.prefill_tokens += prefill_len - cached_tok
+        self.cached_prefill_tokens += cached_tok
         self.events.append(("admit", head.rid))
-        return slot, head
+        return slot, head, cached_tok
+
+    def register_prefix(self, slot: int, index: int, page_hash: str) -> bool:
+        """Publish the content hash of an active slot's fully-written
+        logical page (engine calls this after the chunk that wrote it)."""
+        entry = self.active.get(slot)
+        if entry is None:
+            return False
+        return self.pool.register(entry.arrival, index, page_hash)
 
     def admission_stuck(self, prefill_len: int) -> bool:
         """True when nothing is running and the head request can *never*
@@ -214,10 +301,14 @@ class ContinuousBatchingScheduler:
     def metrics(self) -> Dict[str, float]:
         occ = (self.active_step_sum / (self.decode_steps * self.slots)
                if self.decode_steps else 0.0)
+        asked = self.prefill_tokens + self.cached_prefill_tokens
         return {
             "decode_steps": self.decode_steps,
             "batch_occupancy": occ,
             "prefill_tokens": self.prefill_tokens,
+            "cached_prefill_tokens": self.cached_prefill_tokens,
+            "prefix_hit_rate": (self.cached_prefill_tokens / asked
+                                if asked else 0.0),
             "decode_tokens": self.decode_tokens,
             "preemptions": self.preemptions,
             "completed_requests": self.completed_requests,
@@ -266,13 +357,13 @@ class DeadlineScheduler(ContinuousBatchingScheduler):
         return min(self.waiting,
                    key=lambda e: (self._effective_deadline(e), e.arrival))
 
-    def pop_admit(self, prefill_len: int):
+    def pop_admit(self, prefill_len: int, hasher=None):
         """Count a bypass only when an admission actually happened:
         failed attempts (budget/pool full, no slot) admit nobody, so
         they must not age the oldest entry toward force-admission."""
         oldest = (min(self.waiting, key=lambda e: e.arrival)
                   if self.waiting else None)
-        got = super().pop_admit(prefill_len)
+        got = super().pop_admit(prefill_len, hasher)
         if got is not None and oldest is not None and got[1] is not oldest:
             oldest.skipped += 1
         return got
