@@ -34,6 +34,14 @@ shared-system-prompt workload cached vs cold (prefix caching aliases the
 shared pages, the cold path recomputes them) and reports the
 chunked-prefill decode-liveness fraction; CI asserts cached > cold.
 
+The **serving-resilience** section (``serving.resilience.*``) runs three
+seeded fault scenarios — one poisoned slot mid-decode (degraded-mode
+tokens/s + healthy-completion fraction), 2x overload against the shed
+queue (deterministic 0.5 shed rate), and an injected crash recovered via
+snapshot/restore under the supervisor (recovery steps) — with the pool
+invariant checker (``KVPagePool.audit``) asserted after every scenario;
+CI asserts healthy completion == 1.0 and audit_ok == 1.0.
+
 ``--smoke`` also runs the **bench-regression guard**: the
 scheduler-deterministic counters and relative wall-clock metrics of the
 fresh run are compared against the *committed* ``BENCH_gemm.json``
@@ -334,6 +342,128 @@ def serving_prefix_rows(smoke: bool = True):
     ]
 
 
+def serving_resilience_rows(smoke: bool = True):
+    """Serving-resilience section: degraded-mode throughput, shed rate,
+    recovery cost and pool-invariant health under injected faults.
+
+    Three scenarios, all seeded and deterministic:
+
+    - *degraded mode*: one slot's logits are poisoned (NaN) mid-decode;
+      the engine quarantines that slot and the rest of the batch keeps
+      decoding.  Reported: tokens/s with the poisoned slot in the batch
+      plus the fraction of healthy requests that completed ``ok`` (CI
+      asserts exactly 1.0 — containment, not just survival).
+    - *2x overload*: twice the shed queue depth is submitted upfront, so
+      admission control must shed exactly half — the shed rate is a
+      scheduler-deterministic 0.5, guarded as such.
+    - *crash recovery*: an injected ``EngineCrash`` mid-run under
+      ``serve_with_recovery``; the restarted engine restores the
+      snapshot and drains every request.  Reported: steps the restarted
+      engine needed (lower = better re-attachment).
+
+    ``audit_ok`` is 1.0 iff the pool invariant checker passed after
+    every scenario (the engines run with ``debug_audit=True``, which
+    audits after every step as well).
+    """
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving import Request, ServingEngine
+    from repro.serving.resilience import (Fault, FaultInjector, Shed,
+                                          serve_with_recovery)
+
+    cfg = get_config("gemma_2b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                              vocab=128, n_heads=2, n_kv_heads=1,
+                              head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_tokens = 8 if smoke else 16
+
+    def make_req(rid):
+        return Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab,
+                                           size=int(rng.integers(4, 14)),
+                                           dtype=np.int32),
+                       max_tokens=max_tokens)
+
+    def make_engine(**kw):
+        return ServingEngine(params, cfg, slots=2, cache_len=64,
+                             prefill_len=16, page_size=16,
+                             debug_audit=True, **kw)
+
+    audits_ok = True
+
+    # -- degraded mode: 1 poisoned slot, everyone else finishes ---------------
+    eng = make_engine(fault=FaultInjector([
+        Fault("poison_logits", rid=0, step=3)]))
+    for rid in range(4):
+        eng.submit(make_req(rid))
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    healthy = [r for r in out.values() if r.rid != 0]
+    healthy_frac = (sum(1 for r in healthy if r.status == "ok")
+                    / max(len(healthy), 1))
+    total_tokens = sum(len(v) for v in out.values())
+    try:
+        eng.sched.pool.audit()
+    except AssertionError:
+        audits_ok = False
+
+    # -- 2x overload: shed rate is a deterministic scheduler fact -------------
+    depth = 4
+    eng = make_engine(shed_queue_depth=depth)
+    shed = accepted = 0
+    for rid in range(2 * depth):
+        try:
+            eng.submit(make_req(100 + rid))
+            accepted += 1
+        except Shed:
+            shed += 1
+    eng.run()
+    shed_rate = shed / (shed + accepted)
+    try:
+        eng.sched.pool.audit()
+    except AssertionError:
+        audits_ok = False
+
+    # -- crash recovery: snapshot/restore under the supervisor ----------------
+    injector = FaultInjector([Fault("crash", step=4, count=1)])
+    engines = []
+
+    def factory():
+        e = make_engine(fault=injector)
+        engines.append(e)
+        return e
+
+    out = serve_with_recovery(factory,
+                              [make_req(200 + i) for i in range(4)],
+                              backoff_s=0.0, log=lambda *a, **k: None)
+    recovered = sum(1 for r in out.values() if r.status == "ok")
+    recovery_steps = engines[-1].step_idx
+    try:
+        engines[-1].sched.pool.audit()
+    except AssertionError:
+        audits_ok = False
+
+    return [
+        ("serving.resilience.degraded_tokens_per_s", f"{dt * 1e6:.0f}",
+         f"{total_tokens / max(dt, 1e-9):.1f}"),
+        ("serving.resilience.healthy_completion", "",
+         f"{healthy_frac:.3f}"),
+        ("serving.resilience.shed_rate_2x", "", f"{shed_rate:.3f}"),
+        ("serving.resilience.recovery_steps", "", f"{recovery_steps}"),
+        ("serving.resilience.recovered_requests", "", f"{recovered}"),
+        ("serving.resilience.audit_ok", "", f"{1.0 if audits_ok else 0.0}"),
+    ]
+
+
 # -- bench-regression guard ----------------------------------------------------
 
 # (key, minimum, maximum-ratio-vs-baseline, absolute-minimum): only
@@ -349,6 +479,10 @@ REGRESSION_RULES = [
     ("graph.fusion.decode_qkv.compiled_dispatches", None, 1.00, None),
     ("serving.prefix.cached_vs_cold_speedup",     None, None, 1.10),
     ("serving.prefix.chunked_decode_liveness",    None, None, 0.99),
+    ("serving.resilience.healthy_completion",     None, None, 1.00),
+    ("serving.resilience.shed_rate_2x",           None, None, 0.45),
+    ("serving.resilience.recovery_steps",         None, 1.00, None),
+    ("serving.resilience.audit_ok",               None, None, 1.00),
 ]
 
 
@@ -510,6 +644,9 @@ def main() -> None:
 
     # -- prefix caching + chunked prefill (shared-system-prompt workload) --------
     csv_rows.extend(serving_prefix_rows(smoke=args.smoke))
+
+    # -- resilience: degraded mode, load shedding, crash recovery ----------------
+    csv_rows.extend(serving_resilience_rows(smoke=args.smoke))
 
     # -- roofline (if dry-run artifacts exist) --------------------------------------
     if not args.smoke:

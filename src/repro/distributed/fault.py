@@ -86,31 +86,53 @@ class Heartbeat:
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
+    def beat(self):
+        """Write one liveness stamp, atomically: an external prober that
+        races the write must see either the previous stamp or the new
+        one, never a truncated file — so the stamp goes to a temp file in
+        the same directory and ``os.replace`` swaps it in."""
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(str(time.time()))
+        os.replace(tmp, self.path)
+
     def _loop(self):
         while not self._stop.wait(self.interval_s):
-            with open(self.path, "w") as f:
-                f.write(str(time.time()))
+            self.beat()
 
     def stop(self):
         self._stop.set()
 
 
 def supervise(run_fn: Callable[[int], None], *, max_restarts: int = 10,
-              backoff_s: float = 5.0, log=print) -> int:
+              backoff_s: float = 5.0, log=print,
+              on_give_up: Optional[Callable[[Exception], None]] = None
+              ) -> int:
     """Run ``run_fn(attempt)`` with restart-on-failure.
 
     ``run_fn`` is expected to resume from the latest checkpoint itself
     (see launch/train.py).  Returns the number of restarts consumed.
+
+    When the restart budget is exhausted, ``on_give_up`` (if given) is
+    called with the last exception — a deployment points it at its
+    alerting/drain path — and that exception is re-raised; without the
+    hook a ``RuntimeError`` summarising the budget is raised instead.
     """
+    last: Optional[Exception] = None
     for attempt in range(max_restarts + 1):
         try:
             run_fn(attempt)
             return attempt
         except StragglerError as e:
+            last = e
             log(f"[supervise] straggler on attempt {attempt}: {e}; "
                 f"restarting from latest checkpoint")
         except Exception as e:  # noqa: BLE001 — any failure → restart
+            last = e
             log(f"[supervise] failure on attempt {attempt}: "
                 f"{type(e).__name__}: {e}; restarting")
         time.sleep(backoff_s)
-    raise RuntimeError(f"exceeded {max_restarts} restarts")
+    if on_give_up is not None:
+        on_give_up(last)
+        raise last
+    raise RuntimeError(f"exceeded {max_restarts} restarts") from last

@@ -6,6 +6,13 @@ Example (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
         --requests 8 --max-tokens 16 --page-size 16 --kv-format int8pt
+
+Resilience demo — poison request 0's logits mid-decode and watch the
+engine quarantine that slot while every healthy request still finishes::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
+        --requests 6 --fault-plan poison_logits:rid=0,step=4 \
+        --deadline-ms 60000 --shed-queue-depth 32 --watchdog-s 60
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.resilience import FaultInjector, Shed
 
 
 def main():
@@ -55,6 +63,25 @@ def main():
                          "prefix-cache demo workload")
     ap.add_argument("--plan-cache", default=None,
                     help="GEMM plan-cache JSON to warm-start from / save to")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; a request still running "
+                         "when it expires is cancelled with partial "
+                         "output and status 'deadline'")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="admission control: reject submits once this "
+                         "many requests are waiting (status 'shed')")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="arm a StepWatchdog around every engine step; a "
+                         "straggling step raises StragglerError")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject a deterministic fault plan, e.g. "
+                         "'poison_logits:rid=0,step=4;straggle:step=2,"
+                         "delay_s=0.5' (kinds: alloc_fail, "
+                         "chunk_exception, poison_logits, straggle, "
+                         "crash)")
+    ap.add_argument("--debug-audit", action="store_true",
+                    help="run the KV-pool invariant checker after every "
+                         "engine step (slow; chaos debugging)")
     ap.add_argument("--no-graph", action="store_true",
                     help="eager per-GEMM dispatch instead of compiled "
                          "repro.graph programs (debugging escape hatch; "
@@ -78,7 +105,13 @@ def main():
                            token_budget=args.token_budget,
                            prefix_cache=args.prefix_cache,
                            prefill_chunk=args.prefill_chunk,
-                           plan_cache_path=args.plan_cache)
+                           plan_cache_path=args.plan_cache,
+                           deadline_ms=args.deadline_ms,
+                           shed_queue_depth=args.shed_queue_depth,
+                           watchdog_s=args.watchdog_s,
+                           debug_audit=args.debug_audit,
+                           fault=(FaultInjector.from_spec(args.fault_plan)
+                                  if args.fault_plan else None))
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, size=args.shared_prefix,
@@ -90,9 +123,12 @@ def main():
         prompt = np.concatenate(
             [shared, rng.integers(0, cfg.vocab, size=tail_len,
                                   dtype=np.int32)])
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_tokens=args.max_tokens,
-                              temperature=args.temperature))
+        try:
+            engine.submit(Request(rid=rid, prompt=prompt,
+                                  max_tokens=args.max_tokens,
+                                  temperature=args.temperature))
+        except Shed as e:
+            print(f"  req {rid} shed at submit: {e}")
 
     t0 = time.time()
     outputs = engine.run()
@@ -113,8 +149,17 @@ def main():
           f"{m['prefix_hit_pages']} pages / {m['prefix_queries']} queries), "
           f"{m['shared_pages']} shared, {m['cached_pages']} cached, "
           f"{m['cow_copies']} cow copies")
+    statuses = {}
+    for r in outputs.values():
+        statuses[r.status] = statuses.get(r.status, 0) + 1
+    print(f"  statuses {statuses}, cancelled {m['cancelled_requests']}, "
+          f"shed {m['shed_requests']}")
+    if engine.fault is not None and engine.fault.fired:
+        print(f"  faults fired: {engine.fault.fired}")
     for rid in sorted(outputs):
-        print(f"  req {rid}: {outputs[rid][:12]}...")
+        r = outputs[rid]
+        tag = "" if r.ok else f" [{r.status}]"
+        print(f"  req {rid}{tag}: {list(r)[:12]}...")
     if args.plan_cache:
         engine.save_plan_cache()
         print(f"saved plan cache -> {args.plan_cache}")

@@ -121,9 +121,25 @@ def _slot_update(full, one, slot):
             f, o.astype(f.dtype), slot, axis=0), full, one)
 
 
+def _mask_rows(new, old, row_valid):
+    """Keep only the valid batch rows of a batch-axis-0 cache update.
+
+    ``row_valid`` is a (B,) bool vector; rows where it is False keep the
+    old state, so a batched decode step over a partially-active batch
+    cannot corrupt the ring/recurrent state of rows that are still
+    prefilling (or quarantined) — the mask replaces the engine's former
+    snapshot-and-undo of those rows.
+    """
+    def merge(n, o):
+        m = row_valid.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o.astype(n.dtype))
+    return jax.tree.map(merge, new, old)
+
+
 def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
                  cache=None, pos=None, cache_len: Optional[int] = None,
-                 page_table=None, slot=None, chunk_pos0: Optional[int] = None):
+                 page_table=None, slot=None, chunk_pos0: Optional[int] = None,
+                 row_valid=None):
     """Returns (x, new_cache, aux).
 
     ``mode="prefill_chunk"`` runs one (1, C, D) prompt chunk against the
@@ -131,6 +147,12 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     pool pages and read the whole prefix back through ``page_table``
     (``chunk_pos0`` is the chunk's static first position); ring/recurrent
     layers carry the state of batch row ``slot``.
+
+    ``row_valid`` (decode only): (B,) bool — batch rows whose cache
+    update should be kept.  Paged-attention layers ignore it (inactive
+    rows already write into the reserved null page through the all-−1
+    page-table row); batch-axis caches (ring/RG-LRU/SSD state) are
+    where-merged so invalid rows keep their prior state.
     """
     mixer_kind, ffn_kind = kinds
     window = cfg.window if mixer_kind == "local" else None
@@ -198,6 +220,10 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     else:
         raise ValueError(mixer_kind)
 
+    if (mode == "decode" and row_valid is not None and new_cache is not None
+            and not (isinstance(cache, dict) and "k_pages" in cache)):
+        new_cache = _mask_rows(new_cache, cache, row_valid)
+
     if cfg.post_norms:
         out = norm(out, lp["post_norm1"], cfg.norm_type)
     x = x + out
@@ -244,7 +270,8 @@ def _remat(fn, cfg: ArchConfig):
 
 def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
                cache=None, pos=None, cache_len: Optional[int] = None,
-               page_table=None, slot=None, chunk_pos0: Optional[int] = None):
+               page_table=None, slot=None, chunk_pos0: Optional[int] = None,
+               row_valid=None):
     """Scan the group stack + unrolled tail.  Returns (x, new_cache, aux)."""
     n_groups, n_tail = _group_layout(cfg)
     kinds = cfg.layer_kinds
@@ -270,7 +297,8 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
                 xc, c_new, aux = _apply_layer(
                     xc, _index_tree(gp, j), cfg, kinds[j], positions, mode,
                     cache=layer_cache, pos=pos, cache_len=cache_len,
-                    page_table=page_table, slot=slot, chunk_pos0=chunk_pos0)
+                    page_table=page_table, slot=slot, chunk_pos0=chunk_pos0,
+                    row_valid=row_valid)
                 caches_out.append(c_new)
                 auxc = auxc + aux
             ys = tuple(caches_out) if has_cache else None
@@ -291,7 +319,8 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
         x, c_new, aux = _apply_layer(
             x, params["tail"][j], cfg, kinds[idx], positions, mode,
             cache=layer_cache, pos=pos, cache_len=cache_len,
-            page_table=page_table, slot=slot, chunk_pos0=chunk_pos0)
+            page_table=page_table, slot=slot, chunk_pos0=chunk_pos0,
+            row_valid=row_valid)
         aux_total = aux_total + aux
         if mode in cached_modes:
             new_cache["tail"].append(c_new)
@@ -382,14 +411,20 @@ def decode(params, batch, cache, cfg: ArchConfig):
     (continuous batching: slots sit at different depths).  With a paged
     cache (``init_paged_cache``), ``batch["page_table"]`` carries the
     (B, max_pages) int32 logical→physical page map the attention layers
-    read KV through."""
+    read KV through.  ``batch["row_valid"]`` (optional, (B,) bool) marks
+    the rows whose batch-axis cache updates should be kept — see
+    :func:`_mask_rows`."""
     pos = batch["pos"]
     x, b, s = _inputs_to_x(batch, params, cfg)
     positions = jnp.broadcast_to(
         jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
+    row_valid = batch.get("row_valid")
+    if row_valid is not None:
+        row_valid = jnp.asarray(row_valid, bool).reshape(-1)
     x, new_cache, _ = _run_stack(x, params, cfg, positions, "decode",
                                  cache=cache, pos=pos,
-                                 page_table=batch.get("page_table"))
+                                 page_table=batch.get("page_table"),
+                                 row_valid=row_valid)
     x = norm(x, params["final_norm"], cfg.norm_type)
     logits = unembed(x, params["embedding"], cfg)
     return logits[:, 0], new_cache

@@ -34,11 +34,50 @@ Three layers, policy separated from mechanism:
 
 Client API: ``engine.submit(Request(...)); engine.run()`` — see
 ``examples/serving_continuous.py``.
+
+Failure model
+-------------
+
+Requests fail *individually*; the engine fails *recoverably* — the
+contract :mod:`repro.serving.resilience` implements:
+
+- every way a request can end abnormally has a name in the error
+  taxonomy (:class:`~repro.serving.resilience.RequestError` subclasses:
+  ``DeadlineExceeded``, ``Shed``, ``PoisonedOutput``,
+  ``CapacityExceeded``), and ``run()`` returns a
+  :class:`~repro.serving.resilience.Response` per request — the token
+  list (a ``list`` subclass, so legacy consumers are unchanged) plus a
+  structured ``status``/``error``.
+- **containment**: NaN/inf logits quarantine only the poisoned slot;
+  per-request deadlines cancel only the expired request (slot + pages
+  freed, partial output returned); load shedding rejects at ``submit``
+  (queue-depth / committed-token watermark) instead of growing the
+  queue without bound.  Because fp32 decode rows are independent, every
+  unaffected request completes bit-identical to a fault-free run.
+- **recovery**: ``ServingEngine.snapshot()/restore()`` capture the
+  host-side state (requests, outputs, deadlines, published page
+  hashes); :func:`~repro.serving.resilience.serve_with_recovery` wraps
+  a crash or watchdog-detected straggler in
+  ``repro.distributed.fault.supervise`` and re-admits in-flight work
+  through the prefix-cache re-attachment path.
+- **verification**: :meth:`KVPagePool.audit` checks the pool's
+  conservation invariants (free/cached-free/owned partition, refcount
+  conservation, hash-index bijection); the engine's ``debug_audit``
+  flag runs it after every step, and the seeded
+  :class:`~repro.serving.resilience.FaultInjector` makes chaos tests
+  deterministic (same plan → same firings → same outputs).
 """
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.kv_cache import KVPagePool
+from repro.serving.kv_cache import AuditError, KVPagePool
+from repro.serving.resilience import (CapacityExceeded, DeadlineExceeded,
+                                      EngineCrash, Fault, FaultInjector,
+                                      PoisonedOutput, RequestError, Response,
+                                      Shed, serve_with_recovery)
 from repro.serving.scheduler import (ContinuousBatchingScheduler,
                                      DeadlineScheduler)
 
-__all__ = ["Request", "ServingEngine", "KVPagePool",
-           "ContinuousBatchingScheduler", "DeadlineScheduler"]
+__all__ = ["Request", "ServingEngine", "KVPagePool", "AuditError",
+           "ContinuousBatchingScheduler", "DeadlineScheduler",
+           "RequestError", "DeadlineExceeded", "Shed", "PoisonedOutput",
+           "CapacityExceeded", "EngineCrash", "Response", "Fault",
+           "FaultInjector", "serve_with_recovery"]

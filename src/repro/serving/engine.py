@@ -64,12 +64,35 @@ policy; a request may name its own prefill policy
 (``Request(format_policy="int8")``).  The GEMM plan cache keys plans per
 format, so the JSON warm start (``plan_cache_path=``) restores
 format-keyed plans — including the grouped decode signature.
+
+**Failure model** (see :mod:`repro.serving.resilience`): requests fail
+*individually*, the batch keeps decoding.  ``run()`` returns
+``Dict[int, Response]`` — a list subclass carrying tokens plus a
+structured status.  Per-request deadlines (``deadline_ms``, engine
+default or per ``Request``) cancel late requests in ``step()``, freeing
+their slot/pages and returning partial output with status
+``"deadline"``.  Load shedding (``shed_queue_depth`` /
+``shed_token_watermark``) rejects at ``submit`` with :class:`Shed`
+instead of letting the queue grow without bound.  NaN/inf logits
+quarantine only the poisoned slot (status ``"poisoned"``) — in fp32 the
+batched decode is row-independent, so every other slot's tokens are
+bit-identical to a fault-free run.  A head request that can never fit is
+cancelled with :class:`CapacityExceeded` instead of wedging the engine.
+``snapshot()``/``restore()`` capture the host-side request + page-index
+state so a supervised restart re-admits in-flight requests through the
+prefix-cache re-attachment path; ``watchdog_s`` arms a
+:class:`~repro.distributed.fault.StepWatchdog` around every step so
+hangs become supervised restarts.  ``fault=`` threads a deterministic
+:class:`~repro.serving.resilience.FaultInjector` through the step/chunk/
+logit hooks; ``debug_audit=True`` runs :meth:`KVPagePool.audit` after
+every step.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -79,6 +102,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
 from repro.serving.kv_cache import page_prefix_hashes
+from repro.serving.resilience import (CapacityExceeded, DeadlineExceeded,
+                                      FaultInjector, PoisonedOutput,
+                                      RequestError, Response, Shed)
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
 __all__ = ["Request", "ServingEngine"]
@@ -124,6 +150,9 @@ class Request:
     format_policy: Optional[str] = None  # per-request prefill precision
     deadline: Optional[float] = None     # consumed by DeadlineScheduler
     #                                      (ignored by the FIFO default)
+    deadline_ms: Optional[float] = None  # wall-clock completion deadline,
+    #                                      measured from submit; overrides
+    #                                      the engine-level default
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -140,7 +169,15 @@ class ServingEngine:
                  grouped_qkv: Optional[bool] = None,
                  scheduler_cls=None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 deadline_ms: Optional[float] = None,
+                 shed_queue_depth: Optional[int] = None,
+                 shed_token_watermark: Optional[int] = None,
+                 fault: Optional[FaultInjector] = None,
+                 debug_audit: bool = False,
+                 watchdog_s: Optional[float] = None,
+                 quarantine: bool = True,
+                 clock=None):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -230,7 +267,23 @@ class ServingEngine:
         self._prefill_fns: Dict[Optional[str], Dict[int, object]] = {}
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
-        self._restore_jit = None
+
+        # -- resilience (see repro.serving.resilience) ------------------------
+        self.deadline_ms = deadline_ms
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_token_watermark = shed_token_watermark
+        self.fault = fault
+        self.debug_audit = bool(debug_audit)
+        self.quarantine = bool(quarantine)
+        self._clock = clock or time.monotonic
+        self.step_idx = 0
+        self._deadline_at: Dict[int, float] = {}   # rid -> absolute deadline
+        self._responses: Dict[int, Response] = {}  # rid -> finished Response
+        self.watchdog_s = watchdog_s
+        self._watchdog = None
+        if watchdog_s:
+            from repro.distributed.fault import StepWatchdog
+            self._watchdog = StepWatchdog(watchdog_s)
 
     @property
     def queue(self) -> List[Request]:
@@ -264,7 +317,40 @@ class ServingEngine:
             # every other in-flight request) inside run().
             from repro.core.formats import resolve_format
             resolve_format(req.format_policy)
+        err = self._shed_reason(req)
+        if err is not None:
+            self.sched.shed_requests += 1
+            self._responses[req.rid] = Response(
+                (), rid=req.rid, status=err.code, error=err)
+            raise err
         self.sched.submit(req)
+        dl = req.deadline_ms if req.deadline_ms is not None \
+            else self.deadline_ms
+        if dl is not None:
+            self._deadline_at[req.rid] = self._clock() + dl / 1000.0
+
+    def _shed_reason(self, req: Request) -> Optional[Shed]:
+        """Load-shedding admission: reject at the door when the queue is
+        already deep or the committed-token demand (active + waiting +
+        this request, each booked at ``prefill_len + max_tokens``) is
+        over the watermark — bounded backpressure instead of unbounded
+        queue growth."""
+        if (self.shed_queue_depth is not None
+                and len(self.sched.waiting) >= self.shed_queue_depth):
+            return Shed(f"queue depth {len(self.sched.waiting)} >= "
+                        f"{self.shed_queue_depth} (rid={req.rid})",
+                        rid=req.rid)
+        if self.shed_token_watermark is not None:
+            demand = (self.sched._committed_tokens(self.prefill_len)
+                      + sum(self.prefill_len
+                            + int(getattr(e.req, "max_tokens", 0))
+                            for e in self.sched.waiting)
+                      + self.prefill_len + int(req.max_tokens))
+            if demand > self.shed_token_watermark:
+                return Shed(f"committed-token demand {demand} > watermark "
+                            f"{self.shed_token_watermark} (rid={req.rid})",
+                            rid=req.rid)
+        return None
 
     def save_plan_cache(self, path: Optional[str] = None):
         """Persist tuned GEMM plans for the next process's warm start."""
@@ -273,23 +359,40 @@ class ServingEngine:
         if target:
             autotune.save_plans(target)
 
-    def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
-        """Run until all submitted requests finish (or step budget)."""
+    def run(self, max_steps: int = 1000) -> Dict[int, Response]:
+        """Run until all submitted requests finish (or step budget).
+
+        Returns ``rid -> Response`` — tokens plus structured status
+        (``"ok"``; ``"deadline"``/``"shed"``/``"poisoned"``/
+        ``"capacity"``/``"error"`` for contained failures;
+        ``"incomplete"`` for requests still live at the step budget)."""
         for _ in range(max_steps):
+            self._enforce_deadlines()
             self._admit()
             if not any(r is not None for r in self.slot_req):
                 if not self.sched.waiting:
                     break
                 if self.sched.admission_stuck(self.prefill_len):
+                    # The head alone exceeds the pool/budget: cancel it
+                    # with a structured status instead of wedging the
+                    # queue behind it (the old behaviour raised here).
                     head = self.sched._pick_admit()
-                    raise RuntimeError(
+                    self._cancel_waiting(head, CapacityExceeded(
                         f"request rid={head.rid} can never be admitted: "
                         f"pool={self.sched.pool.describe()}, "
-                        f"token_budget={self.sched.token_budget}")
+                        f"token_budget={self.sched.token_budget}",
+                        rid=head.rid))
                 continue
+            if self._watchdog is not None:
+                self._watchdog.arm()
             self.step()
-        live = self.queue + [r for r in self.slot_req if r is not None]
-        return {r.rid: r.output for r in self.completed + live}
+            if self._watchdog is not None:
+                self._watchdog.disarm()
+                self._watchdog.check()  # straggler -> StragglerError
+        out = dict(self._responses)
+        for r in self.queue + [r for r in self.slot_req if r is not None]:
+            out[r.rid] = Response(r.output, rid=r.rid, status="incomplete")
+        return out
 
     def metrics(self) -> Dict[str, float]:
         """Scheduler counters (occupancy, token split, preemptions,
@@ -378,8 +481,20 @@ class ServingEngine:
         ``batch["page_table"]`` — slots at different depths decode
         together with static shapes, so no recompiles; still-prefilling
         slots ride along masked (all-(−1) table rows scribble their
-        garbage token into the reserved null page).
+        garbage token into the reserved null page, and on architectures
+        with ring/recurrent per-slot state ``row_valid`` masks their
+        batch rows so the carried chunk state survives the decode).
+
+        Containment: the injected :class:`FaultInjector` hooks fire at
+        the step boundary (crash/straggle/alloc-failure) and per decode
+        row (logit poison); non-finite logits quarantine only their slot.
         """
+        self.step_idx += 1
+        if self.fault is not None:
+            # May raise EngineCrash (supervised restart path) or arm a
+            # pool allocation failure / sleep through a straggle.
+            self.fault.step_begin(self.step_idx, pool=self.sched.pool)
+        self._enforce_deadlines()
         self._run_prefill_chunks()
         for slot in list(self.sched.active):
             if self.slot_req[slot] is None or slot in self._prefilling:
@@ -391,6 +506,8 @@ class ServingEngine:
         decoding = [s for s, r in enumerate(self.slot_req)
                     if r is not None and s not in self._prefilling]
         if not decoding:
+            if self.debug_audit:
+                self.sched.pool.audit()
             return
         for slot in decoding:
             self._cow_guard(slot)
@@ -402,15 +519,37 @@ class ServingEngine:
             if req.output:
                 tokens[slot, 0] = req.output[-1]
             table[slot] = self.sched.table_row(slot)
-        prev_cache = (self.cache if (self._prefilling
-                                     and self._stateful_rows) else None)
-        logits, self.cache = self._decode(
-            self.params, {"tokens": jnp.asarray(tokens),
-                          "pos": jnp.asarray(self.slot_pos),
-                          "page_table": jnp.asarray(table)}, self.cache)
-        if prev_cache is not None:
-            self._restore_prefilling_rows(prev_cache)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "pos": jnp.asarray(self.slot_pos),
+                 "page_table": jnp.asarray(table)}
+        if self._stateful_rows:
+            # Row-valid mask: ring/recurrent cache rows of slots that are
+            # not decoding this step (still prefilling, or empty) keep
+            # their prior state inside the decode program itself.  Always
+            # passed for stateful archs so the jit signature is stable.
+            rv = np.zeros(self.slots, bool)
+            rv[decoding] = True
+            batch["row_valid"] = jnp.asarray(rv)
+        logits, self.cache = self._decode(self.params, batch, self.cache)
         self.sched.note_step(len(decoding))
+        logits = np.array(jnp.asarray(logits, jnp.float32))
+        if self.fault is not None:
+            for slot in decoding:
+                val = self.fault.poison_value(self.step_idx,
+                                              self.slot_req[slot].rid)
+                if val is not None:
+                    logits[slot] = val
+        if self.quarantine:
+            healthy = []
+            for slot in decoding:
+                if np.isfinite(logits[slot]).all():
+                    healthy.append(slot)
+                else:
+                    req = self.slot_req[slot]
+                    self._cancel_active(slot, PoisonedOutput(
+                        f"non-finite logits for rid={req.rid} at step "
+                        f"{self.step_idx}", rid=req.rid))
+            decoding = healthy
         for slot in decoding:
             req = self.slot_req[slot]
             if req is None:
@@ -422,11 +561,12 @@ class ServingEngine:
             # Capacity guard: a sequence at the page-table horizon must
             # finish now — there is no logical page for the next token.
             if not done and int(self.slot_pos[slot]) >= self.cache_len:
-                req.done = True
-                self.completed.append(req)
+                self._record_done(req)
                 self.slot_req[slot] = None
                 self.slot_pos[slot] = 0
                 self.sched.release(slot, finished=True)
+        if self.debug_audit:
+            self.sched.pool.audit()
 
     # -- chunked prefill -------------------------------------------------------
     def _run_prefill_chunks(self):
@@ -443,7 +583,12 @@ class ServingEngine:
                 return
             slot = min(self._prefilling,
                        key=lambda s: self.sched.active[s].arrival)
-            self._advance_prefill(slot)
+            try:
+                self._advance_prefill(slot)
+            except RequestError as e:
+                # Chunk-compute failure: contained to this request — its
+                # slot and pages free, every other request unaffected.
+                self._cancel_active(slot, e)
 
     def _advance_prefill(self, slot: int):
         """Run ONE prompt chunk for ``slot`` straight into its pool
@@ -456,8 +601,16 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(toks[None]),
                  "page_table": jnp.asarray(self.sched.table_row(slot)[None]),
                  "slot": jnp.int32(slot)}
-        logits, self.cache = self._chunk_fn(req.format_policy, c)(
-            self.params, batch, self.cache)
+        if self.fault is not None:
+            self.fault.chunk_fault(self.step_idx, req.rid, c)
+        try:
+            logits, self.cache = self._chunk_fn(req.format_policy, c)(
+                self.params, batch, self.cache)
+        except RequestError:
+            raise
+        except Exception as e:  # real compute failure: contain to the request
+            raise RequestError(f"chunk compute failed (rid={req.rid}, "
+                               f"chunk={c}): {e}", rid=req.rid) from e
         # Publish the chunk's fully-written pages to the prefix cache —
         # only now: an eviction mid-prefill must never leave a
         # half-written page findable.
@@ -468,42 +621,159 @@ class ServingEngine:
         st["chunk"] = c + 1
         if st["chunk"] >= self.n_chunks:
             del self._prefilling[slot]
+            logits = np.array(jnp.asarray(logits, jnp.float32))
+            if self.fault is not None:
+                val = self.fault.poison_value(self.step_idx, req.rid)
+                if val is not None:
+                    logits[:] = val
+            if self.quarantine and not np.isfinite(logits).all():
+                raise PoisonedOutput(
+                    f"non-finite prefill logits for rid={req.rid} at step "
+                    f"{self.step_idx}", rid=req.rid)
             tok = int(self._sample(logits, req)[0])
             req.output.append(tok)
             self.slot_pos[slot] = self.prefill_len
             self._finished(slot)
 
+    # -- request-level containment ---------------------------------------------
+    def _record_done(self, req: Request, status: str = "ok",
+                     error: Optional[RequestError] = None):
+        req.done = True
+        self.completed.append(req)
+        self._responses[req.rid] = Response(
+            req.output, rid=req.rid, status=status, error=error,
+            metrics={"tokens": len(req.output)})
+
+    def _cancel_active(self, slot: int, err: RequestError):
+        """Cancel the request in ``slot``: free the slot and its pages
+        (shared pages only decremented) and record the structured
+        failure with whatever partial output exists.  The rest of the
+        batch is untouched."""
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        self.sched.cancel(slot)
+        self._clear_slot(slot)
+        req.done = True
+        self._deadline_at.pop(req.rid, None)
+        self._responses[req.rid] = Response(
+            req.output, rid=req.rid, status=err.code, error=err,
+            metrics={"tokens": len(req.output)})
+
+    def _cancel_waiting(self, entry, err: RequestError):
+        """Cancel a request still in the queue (never admitted)."""
+        self.sched.cancel_waiting(entry)
+        req = entry.req
+        req.done = True
+        self._deadline_at.pop(req.rid, None)
+        self._responses[req.rid] = Response(
+            req.output, rid=req.rid, status=err.code, error=err,
+            metrics={"tokens": len(req.output)})
+
+    def _enforce_deadlines(self):
+        """Cancel every request (active or waiting) whose absolute
+        deadline has passed — partial output is returned with status
+        ``"deadline"`` and the freed capacity goes to the live batch."""
+        if not self._deadline_at:
+            return
+        now = self._clock()
+        for slot, req in enumerate(self.slot_req):
+            if (req is not None
+                    and self._deadline_at.get(req.rid, now + 1) <= now):
+                self._cancel_active(slot, DeadlineExceeded(
+                    f"rid={req.rid} missed its deadline after "
+                    f"{len(req.output)} tokens", rid=req.rid))
+        for entry in list(self.sched.waiting):
+            if self._deadline_at.get(entry.rid, now + 1) <= now:
+                self._cancel_waiting(entry, DeadlineExceeded(
+                    f"rid={entry.rid} missed its deadline in queue",
+                    rid=entry.rid))
+
+    # -- crash recovery --------------------------------------------------------
+    def _geometry(self) -> Dict[str, object]:
+        return {"arch": self.cfg.name, "slots": self.slots,
+                "cache_len": self.cache_len,
+                "prefill_len": self.prefill_len,
+                "page_size": self.page_size,
+                "num_pages": self.sched.pool.num_pages,
+                "kv_format": self.cfg.kv_cache_format}
+
+    def snapshot(self) -> Dict[str, object]:
+        """Host-side state for crash recovery: every live request (in
+        arrival order, with its partial output), the published page
+        registrations, finished responses, and the engine geometry.
+        Pure metadata — no device arrays; pair it with ``self.cache`` if
+        the restore should re-attach the surviving KV."""
+        now = self._clock()
+        entries = sorted(
+            list(self.sched.active.values()) + list(self.sched.waiting),
+            key=lambda e: e.arrival)
+        reqs = []
+        for entry in entries:
+            req = entry.req
+            dl = self._deadline_at.get(req.rid)
+            reqs.append({
+                "rid": req.rid,
+                "prompt": np.asarray(req.prompt, np.int32).tolist(),
+                "output": list(req.output),
+                "max_tokens": req.max_tokens,
+                "temperature": req.temperature,
+                "eos_id": req.eos_id,
+                "format_policy": req.format_policy,
+                "deadline": req.deadline,
+                "deadline_remaining_ms": (
+                    None if dl is None
+                    else max(0.0, (dl - now) * 1000.0)),
+            })
+        return {
+            "version": 1,
+            "geometry": self._geometry(),
+            "requests": reqs,
+            "published": self.sched.pool.registrations(),
+            "responses": {int(rid): {"tokens": list(r), "status": r.status}
+                          for rid, r in self._responses.items()},
+        }
+
+    def restore(self, snap: Dict[str, object], *, cache=None):
+        """Rebuild a freshly-constructed engine from a :meth:`snapshot`.
+
+        Finished responses are carried over; live requests are
+        re-submitted in arrival order (bypassing load shedding — they
+        were already admitted once) and re-enter through normal
+        admission, which re-prefills each request's prompt + generated
+        prefix window.  With ``cache`` (the dying engine's device cache),
+        the snapshot's page registrations are restored into the fresh
+        pool first, so re-admission aliases the published KV through the
+        prefix cache instead of recomputing it.
+        """
+        geo = snap.get("geometry")
+        if geo != self._geometry():
+            raise ValueError(f"snapshot geometry {geo} does not match "
+                             f"this engine {self._geometry()}")
+        if cache is not None:
+            self.cache = cache
+            self.sched.pool.restore_registrations(
+                snap.get("published", ()))
+        for rid, rd in snap.get("responses", {}).items():
+            self._responses[int(rid)] = Response(
+                rd["tokens"], rid=int(rid), status=rd["status"])
+        for rd in snap.get("requests", ()):
+            req = Request(
+                rid=rd["rid"],
+                prompt=np.asarray(rd["prompt"], np.int32),
+                max_tokens=rd["max_tokens"],
+                temperature=rd["temperature"],
+                eos_id=rd["eos_id"],
+                format_policy=rd["format_policy"],
+                deadline=rd["deadline"],
+                output=list(rd["output"]))
+            self.sched.submit(req)  # direct: re-admission is never shed
+            rem = rd.get("deadline_remaining_ms")
+            if rem is not None:
+                self._deadline_at[req.rid] = self._clock() + rem / 1000.0
+        return self
+
     # -- helpers ---------------------------------------------------------------
-    def _restore_prefilling_rows(self, prev):
-        """Undo the batched decode's garbage writes to the ring/recurrent
-        rows of still-prefilling slots (paged layers are safe — masked
-        table rows scribble into the reserved null page, these rows have
-        no mask to hide behind).  One jitted program per distinct slot
-        count — a single fused dispatch on the decode hot path, not a
-        per-leaf eager loop."""
-        if self._restore_jit is None:
-            def go(cur, old, idx):
-                def fix(c, o, grouped):
-                    if isinstance(c, dict) and "k_pages" in c:
-                        return c
-                    return jax.tree.map(
-                        lambda cl, ol: (cl.at[:, idx].set(ol[:, idx])
-                                        if grouped
-                                        else cl.at[idx].set(ol[idx])),
-                        c, o)
-
-                groups = cur["groups"]
-                if groups is not None:
-                    groups = tuple(fix(c, o, True)
-                                   for c, o in zip(groups, old["groups"]))
-                tail = [fix(c, o, False)
-                        for c, o in zip(cur["tail"], old["tail"])]
-                return {"groups": groups, "tail": tail}
-
-            self._restore_jit = jax.jit(go)
-        idx = jnp.asarray(sorted(self._prefilling), jnp.int32)
-        self.cache = self._restore_jit(self.cache, prev, idx)
-
     def _clear_slot(self, slot: int):
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
@@ -559,8 +829,8 @@ class ServingEngine:
             return True
         hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
         if len(req.output) >= req.max_tokens or hit_eos:
-            req.done = True
-            self.completed.append(req)
+            self._record_done(req)
+            self._deadline_at.pop(req.rid, None)
             self.slot_req[slot] = None
             self.slot_pos[slot] = 0
             self.sched.release(slot, finished=True)

@@ -51,14 +51,19 @@ allocate/evict/alias; this class only answers "can I?" and "do it".
 from __future__ import annotations
 
 import hashlib
-from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Sequence
+from collections import Counter, OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.geometry import cdiv
 
-__all__ = ["KVPagePool", "page_prefix_hashes"]
+__all__ = ["KVPagePool", "page_prefix_hashes", "AuditError"]
+
+
+class AuditError(AssertionError):
+    """A :meth:`KVPagePool.audit` invariant was violated — allocation
+    state is corrupt (lost page, refcount drift, dangling index entry)."""
 
 
 def page_prefix_hashes(tokens, page_size: int, salt: str = "") -> List[str]:
@@ -104,6 +109,12 @@ class KVPagePool:
         self.prefix_queries = 0     # admissions that consulted the index
         self.prefix_hit_pages = 0   # pages aliased instead of recomputed
         self.cow_copies = 0         # matched pages re-owned for rewriting
+        # -- fault injection --------------------------------------------------
+        # Consume-once counter (set by a FaultInjector): while positive,
+        # each grant request fails as if the pool were dry, exercising
+        # the caller's deferral/eviction paths.
+        self.inject_alloc_failures = 0
+        self.injected_alloc_failures = 0  # how many actually fired
 
     # -- queries ---------------------------------------------------------------
     @property
@@ -137,6 +148,14 @@ class KVPagePool:
 
     def ref_of(self, page: int) -> int:
         return self._ref.get(page, 0)
+
+    def _fail_injected(self) -> bool:
+        """Consume one injected allocation failure, if armed."""
+        if self.inject_alloc_failures > 0:
+            self.inject_alloc_failures -= 1
+            self.injected_alloc_failures += 1
+            return True
+        return False
 
     # -- allocation ------------------------------------------------------------
     def _alloc_page(self) -> Optional[int]:
@@ -174,7 +193,7 @@ class KVPagePool:
         grow = need - len(owned)
         if grow <= 0:
             return True
-        if self.free_pages < grow:
+        if self.free_pages < grow or self._fail_injected():
             return False
         for _ in range(grow):
             page = self._alloc_page()
@@ -244,6 +263,8 @@ class KVPagePool:
                        - sum(1 for p in keep if p in self._cached_free))
         if need - keep_pages > reclaimable:
             return False
+        if need - keep_pages > 0 and self._fail_injected():
+            return False
         owned = []
         for page in keep:
             self._cached_free.pop(page, None)
@@ -297,6 +318,108 @@ class KVPagePool:
         pages[index] = new
         self.cow_copies += 1
         return old, new
+
+    # -- invariants ------------------------------------------------------------
+    def audit(self) -> None:
+        """Check every allocation invariant; raise :class:`AuditError` on
+        the first violation.  O(num_pages); cheap enough to run after
+        every operation in chaos tests and behind the engine's
+        ``debug_audit`` flag in production-shaped runs.
+
+        Invariants:
+          1. partition: plain-free ∪ cached-free ∪ owned == pages 1..N−1,
+             with no page in two states and no duplicates within one;
+          2. refcount conservation: ``_ref[p]`` equals the number of
+             sequence page-lists containing ``p``, exactly;
+          3. content index is a bijection: ``_page_of`` and ``_hash_of``
+             are inverse maps, and every indexed page is live (ref > 0)
+             or cached-free — never plain-free or unknown;
+          4. every cached-free page still has a registration (else it
+             belongs on the plain free list);
+          5. shared pages (ref > 1) are registered — sharing only arises
+             from aliasing published content, and writers must
+             :meth:`make_private` first (read-only sharing);
+          6. the null page 0 appears nowhere.
+        """
+        def fail(msg: str):
+            raise AuditError(f"KVPagePool.audit: {msg} [{self.describe()}]")
+
+        free = list(self._free)
+        cached = list(self._cached_free)
+        held = Counter()
+        for key, pages in self._owned.items():
+            if len(set(pages)) != len(pages):
+                fail(f"sequence {key} owns a duplicate page: {pages}")
+            held.update(pages)
+        for name, group in (("free", free), ("cached-free", cached)):
+            if len(set(group)) != len(group):
+                fail(f"duplicate page in {name} list: {group}")
+            for p in group:
+                if held[p]:
+                    fail(f"page {p} is both {name} and owned")
+        if set(free) & set(cached):
+            fail(f"pages both free and cached-free: {set(free) & set(cached)}")
+        every = set(free) | set(cached) | set(held)
+        want = set(range(1, self.num_pages))
+        if every != want:
+            lost, extra = want - every, every - want
+            fail(f"page partition broken (lost={sorted(lost)}, "
+                 f"unknown={sorted(extra)})")
+        if dict(held) != self._ref:
+            drift = {p: (self._ref.get(p, 0), held[p])
+                     for p in set(held) | set(self._ref)
+                     if self._ref.get(p, 0) != held[p]}
+            fail(f"refcount drift (page: recorded vs actual) {drift}")
+        for h, p in self._page_of.items():
+            if self._hash_of.get(p) != h:
+                fail(f"index not a bijection: hash {h!r} -> page {p} -> "
+                     f"{self._hash_of.get(p)!r}")
+            if not held[p] and p not in self._cached_free:
+                fail(f"index entry {h!r} points at dead page {p}")
+        for p, h in self._hash_of.items():
+            if self._page_of.get(h) != p:
+                fail(f"index not a bijection: page {p} -> hash {h!r} -> "
+                     f"{self._page_of.get(h)}")
+        for p in cached:
+            if p not in self._hash_of:
+                fail(f"cached-free page {p} has no registration")
+        for p, r in self._ref.items():
+            if r > 1 and p not in self._hash_of:
+                fail(f"shared page {p} (ref={r}) is unregistered — "
+                     f"sharing must come from published content")
+        if held[0] or 0 in every:
+            fail("null page 0 was granted")
+
+    # -- crash recovery --------------------------------------------------------
+    def registrations(self) -> List[Tuple[int, str]]:
+        """Snapshot of the content index as ``(page, hash)`` pairs —
+        the pool half of :meth:`ServingEngine.snapshot`."""
+        return sorted(self._hash_of.items())
+
+    def restore_registrations(self,
+                              pairs: Sequence[Tuple[int, str]]) -> int:
+        """Re-seed the content index after a restart that kept the device
+        cache: each ``(page, hash)`` from a pre-crash snapshot moves that
+        page from the plain free list to the cached-free list under its
+        hash, making the surviving KV findable by ``lookup_prefix`` again.
+        Entries whose page is not plain-free, or whose page/hash is
+        already indexed, are skipped (the restarted pool may have been
+        used already).  Returns the number restored.
+        """
+        free = set(self._free)
+        restored = 0
+        for page, page_hash in pairs:
+            page = int(page)
+            if (page not in free or page in self._hash_of
+                    or page_hash in self._page_of):
+                continue
+            self._free.remove(page)
+            free.discard(page)
+            self._hash_of[page] = page_hash
+            self._page_of[page_hash] = page
+            self._cached_free[page] = None
+            restored += 1
+        return restored
 
     # -- device-side view ------------------------------------------------------
     def table_row(self, key: Optional[int], max_pages: int) -> np.ndarray:

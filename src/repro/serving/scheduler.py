@@ -116,6 +116,8 @@ class ContinuousBatchingScheduler:
         self.decode_tokens = 0
         self.preemptions = 0
         self.completed_requests = 0
+        self.cancelled_requests = 0   # structured per-request failures
+        self.shed_requests = 0        # rejected at submit (engine-counted)
 
     # -- queue -----------------------------------------------------------------
     def submit(self, req) -> ScheduledRequest:
@@ -286,6 +288,24 @@ class ContinuousBatchingScheduler:
             self.completed_requests += 1
             self.events.append(("finish", entry.rid))
 
+    # -- request-level containment ---------------------------------------------
+    def cancel(self, slot: int) -> ScheduledRequest:
+        """Cancel an *active* request: free its slot and pages (shared
+        pages decremented, never freed — identical to eviction) without
+        requeueing it.  The engine records the structured failure."""
+        entry = self.active.pop(slot)
+        self.pool.release(entry.arrival)
+        self.cancelled_requests += 1
+        self.events.append(("cancel", entry.rid))
+        return entry
+
+    def cancel_waiting(self, entry: ScheduledRequest) -> None:
+        """Cancel a *waiting* request (deadline passed in queue, or the
+        head can never fit): it leaves the line without being admitted."""
+        self.waiting.remove(entry)
+        self.cancelled_requests += 1
+        self.events.append(("cancel", entry.rid))
+
     # -- device-side view / metrics --------------------------------------------
     def table_row(self, slot: int):
         entry = self.active.get(slot)
@@ -312,6 +332,8 @@ class ContinuousBatchingScheduler:
             "decode_tokens": self.decode_tokens,
             "preemptions": self.preemptions,
             "completed_requests": self.completed_requests,
+            "cancelled_requests": self.cancelled_requests,
+            "shed_requests": self.shed_requests,
         }
 
 

@@ -134,13 +134,20 @@ def test_starvation_freedom_under_repeated_preemption(setup):
             assert r <= rid or r not in first_subs
 
 
-def test_engine_raises_when_head_can_never_fit(setup):
+def test_engine_cancels_head_that_can_never_fit(setup):
+    """A head request the pool can never hold is cancelled with a
+    structured ``capacity`` status (freeing the line behind it) instead
+    of wedging the engine — requests that do fit still complete."""
     cfg, params, prompts = setup
     engine = ServingEngine(params, cfg, slots=1, cache_len=32,
                            prefill_len=16, page_size=4, num_pages=3)
     engine.submit(Request(rid=0, prompt=prompts[0], max_tokens=4))
-    with pytest.raises(RuntimeError, match="never be admitted"):
-        engine.run()
+    out = engine.run()
+    assert out[0].status == "capacity" and list(out[0]) == []
+    assert "never be admitted" in str(out[0].error)
+    m = engine.metrics()
+    assert m["cancelled_requests"] == 1
+    assert m["free_pages"] == m["num_pages"] - 1  # nothing leaked
 
 
 # -- int8pt format policy -----------------------------------------------------
