@@ -235,6 +235,26 @@ class ArchConfig:
             kw["rglru"] = dataclasses.replace(self.rglru, width=128)
         return dataclasses.replace(self, **kw)
 
+    def draft(self, groups: int = 1, *,
+              format_policy: Optional[str] = None) -> "ArchConfig":
+        """Config for a truncated-depth speculative-decoding draft.
+
+        Same widths and layer pattern, ``groups`` periods deep — pairs
+        with ``models.model.draft_from`` which slices the target's
+        scanned group params (zero extra memory).  ``format_policy``
+        optionally runs the draft under a cheaper GEMM format than the
+        target (e.g. an int8 draft under a bf16 target); the draft keeps
+        its own plan-cache signatures either way since its layer count
+        differs.
+        """
+        n_groups = self.n_layers // self.period if self.scan_layers else 0
+        if not 0 < groups <= n_groups:
+            raise ValueError(
+                f"draft needs 1..{n_groups} scanned groups, got {groups}")
+        return dataclasses.replace(
+            self, name=f"{self.name}_draft{groups}",
+            n_layers=groups * self.period, format_policy=format_policy)
+
 
 # ---------------------------------------------------------------------------
 # Assigned input shapes (LM family: seq_len × global_batch)

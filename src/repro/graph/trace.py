@@ -30,7 +30,8 @@ from repro.core.epilogue import Epilogue
 from repro.graph.ir import (CastNode, EpilogueNode, GemmNode, Graph,
                             GroupNode, ValueInfo)
 
-__all__ = ["GraphBuilder", "GemmCapture", "trace_gemms", "active"]
+__all__ = ["GraphBuilder", "GemmCapture", "trace_gemms", "active",
+           "merge_graphs"]
 
 
 def _dtype_name(dt) -> str:
@@ -285,3 +286,54 @@ def trace_gemms():
         yield cap
     finally:
         _ACTIVE = prev
+
+
+def merge_graphs(*graphs: "Graph") -> "Graph":
+    """Concatenate independent programs into ONE :class:`Graph`.
+
+    Value ids of graph ``i`` are shifted by the total value count of the
+    graphs before it; inputs/outputs concatenate in graph order, so
+    execution binds each constituent's arguments contiguously.  The
+    merged program has one signature and compiles (fuses, schedules,
+    plans) as a unit — this is how the serving engine presents a
+    draft-model step and a target verify chunk to the scheduler as one
+    speculative-decoding pipeline, letting grouping and tile
+    stabilization see both models' GEMMs together.
+
+    The constituents must be independent (no cross-graph data flow);
+    wiring one graph's output into another's input is a builder-level
+    concern, not a merge.
+    """
+    values: List[ValueInfo] = []
+    nodes: list = []
+    inputs: List[int] = []
+    outputs: List[int] = []
+    for g in graphs:
+        off = len(values)
+
+        def s(v, off=off):
+            return None if v is None else v + off
+
+        values.extend(g.values)
+        inputs.extend(v + off for v in g.inputs)
+        outputs.extend(v + off for v in g.outputs)
+        for n in g.nodes:
+            if isinstance(n, GemmNode):
+                nodes.append(dataclasses.replace(
+                    n, a=s(n.a), b=s(n.b), out=s(n.out), c=s(n.c),
+                    bias=s(n.bias)))
+            elif isinstance(n, EpilogueNode):
+                nodes.append(dataclasses.replace(
+                    n, args=tuple(s(a) for a in n.args), out=s(n.out)))
+            elif isinstance(n, CastNode):
+                nodes.append(dataclasses.replace(n, x=s(n.x), out=s(n.out)))
+            elif isinstance(n, GroupNode):
+                nodes.append(dataclasses.replace(
+                    n, a=s(n.a), outputs=tuple(s(o) for o in n.outputs),
+                    weights=tuple(s(w) for w in n.weights),
+                    stacked=s(n.stacked),
+                    biases=tuple(s(b) for b in n.biases)))
+            else:
+                raise TypeError(type(n).__name__)
+    return Graph(values=values, nodes=nodes, inputs=tuple(inputs),
+                 outputs=tuple(outputs))

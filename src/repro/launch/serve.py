@@ -7,6 +7,13 @@ Example (CPU-scale)::
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
         --requests 8 --max-tokens 16 --page-size 16 --kv-format int8pt
 
+Speculative decoding — a weight-shared draft proposes 3 tokens per step
+and the target verifies the window in one M=4 GEMM program (greedy
+output is bit-identical to vanilla decode)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2_27b \
+        --reduced --requests 8 --max-tokens 24 --spec-k 4
+
 Resilience demo — poison request 0's logits mid-decode and watch the
 engine quarantine that slot while every healthy request still finishes::
 
@@ -82,6 +89,27 @@ def main():
     ap.add_argument("--debug-audit", action="store_true",
                     help="run the KV-pool invariant checker after every "
                          "engine step (slow; chaos debugging)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding window: a weight-shared "
+                         "draft proposes k-1 tokens per step, the target "
+                         "verifies the window in ONE M=k GEMM program "
+                         "(0/1: vanilla decode)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="force vanilla decode (overrides --spec-k)")
+    ap.add_argument("--draft-config", default=None,
+                    help="config name for a separately-parameterized "
+                         "draft model (default: a truncated weight-"
+                         "shared stack of the target, see --draft-groups)")
+    ap.add_argument("--draft-groups", type=int, default=1,
+                    help="scan groups kept in the weight-shared draft "
+                         "truncation (ignored with --draft-config)")
+    ap.add_argument("--draft-format", default=None,
+                    help="FormatPolicy for the draft's GEMMs (e.g. int8 "
+                         "draft under a bf16 target; default: target's)")
+    ap.add_argument("--prefix-index", default=None,
+                    help="JSON path for the pool's published page hashes "
+                         "— saved after run(), reloaded at start so a "
+                         "restarted engine aliases surviving KV")
     ap.add_argument("--no-graph", action="store_true",
                     help="eager per-GEMM dispatch instead of compiled "
                          "repro.graph programs (debugging escape hatch; "
@@ -94,6 +122,12 @@ def main():
     if args.no_graph:
         import dataclasses
         cfg = dataclasses.replace(cfg, use_graph=False)
+
+    draft_cfg = None
+    if args.draft_config:
+        draft_cfg = get_config(args.draft_config)
+        if args.reduced:
+            draft_cfg = draft_cfg.reduced()
 
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
@@ -110,6 +144,11 @@ def main():
                            shed_queue_depth=args.shed_queue_depth,
                            watchdog_s=args.watchdog_s,
                            debug_audit=args.debug_audit,
+                           spec_k=0 if args.no_spec else args.spec_k,
+                           draft_config=draft_cfg,
+                           draft_groups=args.draft_groups,
+                           draft_format_policy=args.draft_format,
+                           prefix_index_path=args.prefix_index,
                            fault=(FaultInjector.from_spec(args.fault_plan)
                                   if args.fault_plan else None))
 
@@ -149,6 +188,13 @@ def main():
           f"{m['prefix_hit_pages']} pages / {m['prefix_queries']} queries), "
           f"{m['shared_pages']} shared, {m['cached_pages']} cached, "
           f"{m['cow_copies']} cow copies")
+    if m.get("spec_on"):
+        print(f"  speculative decode k={m['spec_k']} "
+              f"(mean window {m.get('spec_k_mean', 0):.2f}): "
+              f"{m['spec_steps']} spec steps, "
+              f"accepted/step {m.get('accepted_per_step', 0.0):.2f}, "
+              f"acceptance rate {m.get('acceptance_rate', 0.0):.2f}, "
+              f"{m['spec_emitted']} tokens emitted speculatively")
     statuses = {}
     for r in outputs.values():
         statuses[r.status] = statuses.get(r.status, 0) + 1

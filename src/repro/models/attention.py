@@ -24,7 +24,7 @@ from repro.models.layers import (dense, init_dense, init_norm, model_format,
 __all__ = ["init_attention", "attention", "init_attn_cache",
            "decode_attention", "init_paged_attn_cache",
            "paged_decode_attention", "paged_prefill_attention",
-           "ring_chunk_attention"]
+           "ring_chunk_attention", "verify_paged_attention"]
 
 _NEG_INF = -1e30
 
@@ -536,6 +536,100 @@ def paged_decode_attention(x, p, cfg, cache, pos, page_table, *,
             kv_positions=kv_positions, q_positions=pos_b[:, None],
             chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
         out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return dense(out, p["o"], cfg), new_cache
+
+
+def verify_paged_attention(x, p, cfg, cache, pos, page_table):
+    """Score a K-token speculative window over the paged KV pool.
+
+    x: (B, K, D) — per row, the last emitted token followed by K−1 draft
+    proposals; pos: (B,) the window's first absolute positions (dynamic —
+    slots sit at different depths, unlike ``paged_prefill_attention``'s
+    static ``kv_len``); page_table: (B, max_pages).  This is the decode
+    semantics of :func:`paged_decode_attention` run K times, expressed as
+    ONE batched pass: the window's K/V are quantized under
+    ``cfg.kv_cache_format`` and scattered into their (physical page, slot)
+    targets FIRST, then each of the K queries attends over the gathered
+    pages — scattered window tokens included, so a quantized cache
+    round-trips the in-window tokens exactly as vanilla decode would, and
+    the gathered KV axis has the *same* (max_pages·page) layout as the
+    decode read (greedy acceptance therefore reproduces vanilla argmax
+    bit-for-bit on the XLA path).  Within the window, causality between
+    the K queries rides on ``q_positions``.
+
+    A rejected suffix is never un-written: page slots past the accepted
+    point hold garbage the next window simply overwrites — the engine
+    rewinds only the host-side position (global-attention pages are
+    position-addressed, so no old KV is ever overwritten by the window).
+    Returns (out, new_cache).
+    """
+    b, klen, _ = x.shape
+    hd = cfg.hd
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_b[:, None] + jnp.arange(klen, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv_decode(x, p, cfg, positions)
+    page = cache["k_pages"].shape[1]
+    maxp = page_table.shape[1]
+    rows = jnp.arange(b)[:, None]
+    # Inactive slots (all-unmapped rows) clamp to the null page 0.
+    phys = jnp.maximum(page_table[rows, positions // page], 0)   # (B, K)
+    slot = positions % page
+    fmt = _kv_storage_format(cfg)
+    quant = "k_scale" in cache
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k, per_channel=fmt.per_channel)
+        vq, vs = _quantize_kv(v, per_channel=fmt.per_channel)
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(kq)
+        new_cache["k_scale"] = cache["k_scale"].at[phys, slot].set(ks)
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(vq)
+        new_cache["v_scale"] = cache["v_scale"].at[phys, slot].set(vs)
+    else:
+        dt = cache["k_pages"].dtype
+        new_cache["k_pages"] = cache["k_pages"].at[phys, slot].set(
+            k.astype(dt))
+        new_cache["v_pages"] = cache["v_pages"].at[phys, slot].set(
+            v.astype(dt))
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+    if cfg.gemm_backend == "pallas":
+        # The paged flash-decode kernel is one-query; run it per window
+        # position (K is small and static) so every query goes through
+        # the exact kernel vanilla decode uses — bit-identity by
+        # construction.  seq_lens masks each query to its own prefix.
+        from repro.kernels import ops
+        outs = []
+        for i in range(klen):
+            o = ops.flash_decode_paged(
+                q[:, i], new_cache["k_pages"], new_cache["v_pages"],
+                page_table, pos_b + i + 1,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"),
+                window=None, softcap=cfg.attn_softcap, scale=scale)
+            outs.append(o.reshape(b, 1, -1))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        def gather(leaf):
+            g = leaf[jnp.maximum(page_table, 0)]   # (B, maxp, page, kv, ·)
+            return g.reshape(b, maxp * page, *leaf.shape[2:])
+
+        kg = gather(new_cache["k_pages"])
+        vg = gather(new_cache["v_pages"])
+        if quant:
+            cdt = jnp.dtype(cfg.compute_dtype)
+            kg = _dequantize_kv(kg, gather(new_cache["k_scale"]), cdt)
+            vg = _dequantize_kv(vg, gather(new_cache["v_scale"]), cdt)
+        idx = jnp.arange(maxp * page)[None, :]
+        mapped = jnp.repeat(page_table >= 0, page, axis=1)
+        kv_positions = jnp.where((idx <= positions[:, -1:]) & mapped,
+                                 idx, -1)
+        out = _xla_attention(
+            q.transpose(0, 2, 1, 3), kg.transpose(0, 2, 1, 3),
+            vg.transpose(0, 2, 1, 3), causal=True, window=None,
+            softcap=cfg.attn_softcap, scale=scale,
+            kv_positions=kv_positions, q_positions=positions,
+            chunk=getattr(cfg, "attn_chunk", _KV_CHUNK))
+        out = out.transpose(0, 2, 1, 3).reshape(b, klen, -1)
     return dense(out, p["o"], cfg), new_cache
 
 

@@ -16,6 +16,11 @@ Four entry points:
   already holding the prefix — including pages merely aliased from the
   prefix cache — while ring/recurrent layers carry their slot state)
 - ``decode``   — single-token cached step
+- ``verify_chunk`` — speculative-decoding verification: K candidate
+  tokens per slot scored in one batched pass whose GEMMs carry M = B·K
+  rows (paged attention reads the window in one masked pass; ring and
+  recurrent mixers replay their exact decode step per position so greedy
+  acceptance is bit-identical to K vanilla decode steps)
 
 Cache pytrees mirror the params pytree: ``{"groups": stacked, "tail": [..]}``.
 """
@@ -37,7 +42,8 @@ from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
                                  mlp, norm, unembed)
 
 __all__ = ["init_params", "forward", "prefill", "prefill_chunk", "decode",
-           "init_cache", "init_paged_cache", "loss_fn", "param_count"]
+           "verify_chunk", "draft_from", "init_cache", "init_paged_cache",
+           "loss_fn", "param_count"]
 
 
 # -- init ---------------------------------------------------------------------
@@ -148,11 +154,20 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     (``chunk_pos0`` is the chunk's static first position); ring/recurrent
     layers carry the state of batch row ``slot``.
 
-    ``row_valid`` (decode only): (B,) bool — batch rows whose cache
+    ``row_valid`` (decode/verify): (B,) bool — batch rows whose cache
     update should be kept.  Paged-attention layers ignore it (inactive
     rows already write into the reserved null page through the all-−1
     page-table row); batch-axis caches (ring/RG-LRU/SSD state) are
     where-merged so invalid rows keep their prior state.
+
+    ``mode="verify"`` scores a (B, K, D) speculative window starting at
+    per-row positions ``pos``.  Paged attention handles all K positions
+    in one batched read (layout-identical to K decode reads — see
+    ``verify_paged_attention``); every other mixer is a sequential
+    recurrence whose batched formulation re-associates floating point, so
+    those replay the *decode-step* kernel once per window position —
+    keeping greedy verification bit-identical to vanilla decode while
+    the dense FFN/projection GEMMs still run with M = B·K rows.
     """
     mixer_kind, ffn_kind = kinds
     window = cfg.window if mixer_kind == "local" else None
@@ -160,8 +175,29 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     new_cache = None
 
     h = norm(x, lp["norm1"], cfg.norm_type)
-    if mixer_kind in ("attn", "local"):
-        if mode == "prefill_chunk":
+    if mode == "verify" and not (mixer_kind == "attn"
+                                 and isinstance(cache, dict)
+                                 and "k_pages" in cache):
+        # Sequential mixers: one exact decode step per window position.
+        step = {"rglru": lambda hi, c, i: rglru_mod.rglru_decode(
+                    hi, lp["mixer"], cfg, c),
+                "ssd": lambda hi, c, i: ssm_mod.ssd_decode(
+                    hi, lp["mixer"], cfg, c),
+                "attn": lambda hi, c, i: attn_mod.decode_attention(
+                    hi, lp["mixer"], cfg, c, pos + i, window=window),
+                "local": lambda hi, c, i: attn_mod.decode_attention(
+                    hi, lp["mixer"], cfg, c, pos + i, window=window),
+                }[mixer_kind]
+        outs, new_cache = [], cache
+        for i in range(h.shape[1]):
+            o, new_cache = step(h[:, i:i + 1], new_cache, i)
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1)
+    elif mixer_kind in ("attn", "local"):
+        if mode == "verify":
+            out, new_cache = attn_mod.verify_paged_attention(
+                h, lp["mixer"], cfg, cache, pos, page_table)
+        elif mode == "prefill_chunk":
             if isinstance(cache, dict) and "k_pages" in cache:
                 out, new_cache = attn_mod.paged_prefill_attention(
                     h, lp["mixer"], cfg, cache, positions, page_table,
@@ -220,7 +256,8 @@ def _apply_layer(x, lp, cfg: ArchConfig, kinds, positions, mode: str,
     else:
         raise ValueError(mixer_kind)
 
-    if (mode == "decode" and row_valid is not None and new_cache is not None
+    if (mode in ("decode", "verify") and row_valid is not None
+            and new_cache is not None
             and not (isinstance(cache, dict) and "k_pages" in cache)):
         new_cache = _mask_rows(new_cache, cache, row_valid)
 
@@ -277,8 +314,8 @@ def _run_stack(x, params, cfg: ArchConfig, positions, mode: str,
     kinds = cfg.layer_kinds
     aux_total = jnp.zeros((), jnp.float32)
     new_cache = {"groups": None, "tail": []}
-    cached_modes = ("prefill", "decode", "prefill_chunk")
-    threads_cache = mode in ("decode", "prefill_chunk")
+    cached_modes = ("prefill", "decode", "prefill_chunk", "verify")
+    threads_cache = mode in ("decode", "prefill_chunk", "verify")
 
     if n_groups:
         has_cache = mode in cached_modes
@@ -428,6 +465,65 @@ def decode(params, batch, cache, cfg: ArchConfig):
     x = norm(x, params["final_norm"], cfg.norm_type)
     logits = unembed(x, params["embedding"], cfg)
     return logits[:, 0], new_cache
+
+
+def verify_chunk(params, batch, cache, cfg: ArchConfig):
+    """Speculative-decoding verification: → (logits f32 (B, K, V), new_cache).
+
+    ``batch["tokens"]`` is (B, K): per row, the last *emitted* token
+    followed by K−1 draft proposals; ``batch["pos"]`` (scalar or (B,))
+    gives each row's window start — the position of that last emitted
+    token, i.e. the number of positions already holding KV.  Logits row
+    ``i`` is the target distribution for position ``pos+i+1`` and judges
+    draft ``i+1`` — the engine accepts the longest prefix of drafts the
+    target agrees with and resamples at the first mismatch.
+
+    Paged attention scores all K positions in one pass; ring/recurrent
+    layers replay exact decode steps (see ``_apply_layer``); FFN and
+    projection GEMMs run once with M = B·K rows — the tall/skinny M=1
+    decode GEMV becomes a small GEMM on the same plan-cache signature
+    family as a prefill chunk.  ``batch["row_valid"]`` masks batch-axis
+    cache updates as in :func:`decode`; rows the engine later rejects are
+    rolled back by restoring state and replaying accepted tokens (paged
+    KV past the accepted point is garbage the next window overwrites).
+    """
+    pos = batch["pos"]
+    x, b, s = _inputs_to_x(batch, params, cfg)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    positions = pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    row_valid = batch.get("row_valid")
+    if row_valid is not None:
+        row_valid = jnp.asarray(row_valid, bool).reshape(-1)
+    x, new_cache, _ = _run_stack(x, params, cfg, positions, "verify",
+                                 cache=cache, pos=pos_b,
+                                 page_table=batch.get("page_table"),
+                                 row_valid=row_valid)
+    x = norm(x, params["final_norm"], cfg.norm_type)
+    logits = unembed(x, params["embedding"], cfg)
+    return logits.astype(jnp.float32), new_cache
+
+
+def draft_from(params, cfg: ArchConfig, *, groups: int = 1):
+    """Weight-shared draft params: the first ``groups`` layer groups of a
+    scanned target stack, plus the target's embedding/unembedding and
+    final norm.  Pairs with ``cfg.draft(groups)`` — a truncated-depth
+    draft costs no extra memory (every leaf is a view/slice of the target
+    params) and is the zero-setup baseline drafter; a distilled or
+    separately-trained draft can be substituted by passing any params
+    matching the draft config.
+    """
+    n_groups, _ = _group_layout(cfg)
+    if not n_groups:
+        raise ValueError("draft_from needs a scanned group stack "
+                         "(cfg.scan_layers with n_layers >= period)")
+    if not 0 < groups <= n_groups:
+        raise ValueError(f"groups must be in [1, {n_groups}], got {groups}")
+    return {
+        "embedding": params["embedding"],
+        "groups": jax.tree.map(lambda a: a[:groups], params["groups"]),
+        "tail": [],
+        "final_norm": params["final_norm"],
+    }
 
 
 def init_cache(cfg: ArchConfig, batch: int, seq_len: int):

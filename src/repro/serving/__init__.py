@@ -35,6 +35,42 @@ Three layers, policy separated from mechanism:
 Client API: ``engine.submit(Request(...)); engine.run()`` — see
 ``examples/serving_continuous.py``.
 
+Speculative decoding
+--------------------
+
+``ServingEngine(spec_k=k)`` (k >= 2) replaces the M=1 decode GEMV with a
+draft-and-verify step — the tall/skinny regime the source paper's
+flexible tiles are built for.  Anatomy of one step:
+
+- **draft k-1**: a small draft model — by default the target's first
+  scan group(s), weight-shared via ``models.draft_from`` (zero extra
+  parameter memory), optionally a separate ``draft_config`` under its
+  own ``FormatPolicy`` (e.g. an int8 draft under a bf16 target) —
+  catches up on the slot's known tokens and proposes ``k-1`` tokens
+  autoregressively against its own slot-private paged KV.
+- **verify chunk**: the target scores the whole window
+  ``[last_emitted, d_1..d_{k-1}]`` in ONE ``models.verify_chunk`` call
+  over the shared paged pool — the same arbitrary-window machinery as a
+  prefill chunk, so its GEMMs carry ``M = slots*k`` rows and land on
+  the plan-cache signature family prefill already warmed.  The merged
+  draft+verify GEMM pipeline is compiled as one ``repro.graph`` program
+  at engine construction.
+- **accept / rewind**: greedy acceptance keeps proposals while the
+  target argmax agrees (output **bit-identical** to vanilla decode);
+  sampled requests run canonical rejection sampling (accept w.p.
+  ``min(1, p_t/p_d)``, resample the residual on reject), preserving the
+  target distribution exactly.  Rejected tokens *rewind*: page-table
+  positions move back, no pages are freed — garbage KV past the
+  accepted point is overwritten by the next window (ring/recurrent rows
+  restore their pre-verify state and replay the accepted prefix).
+- **budget accounting**: a speculative step commits up to ``k-1`` extra
+  page slots per sequence before acceptance is known, so depth is load
+  traffic: ``scheduler.spec_k(n_decoding)`` (a policy hook) plus
+  per-slot page/horizon clamps shrink k under pressure — a full pool
+  degrades to k=1 (exactly vanilla decode) instead of evicting anyone.
+  ``note_spec_step`` feeds ``accepted_per_step`` / ``acceptance_rate``
+  into ``metrics()``.
+
 Failure model
 -------------
 

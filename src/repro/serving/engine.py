@@ -177,7 +177,13 @@ class ServingEngine:
                  debug_audit: bool = False,
                  watchdog_s: Optional[float] = None,
                  quarantine: bool = True,
-                 clock=None):
+                 clock=None,
+                 spec_k: int = 0,
+                 draft_params=None,
+                 draft_config: Optional[ArchConfig] = None,
+                 draft_groups: int = 1,
+                 draft_format_policy: Optional[str] = None,
+                 prefix_index_path: Optional[str] = None):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -267,6 +273,82 @@ class ServingEngine:
         self._prefill_fns: Dict[Optional[str], Dict[int, object]] = {}
         self._decode = jax.jit(
             lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
+
+        # -- prefix-index persistence (cross-engine prefix cache) --------------
+        # JSON of the pool's published (page, hash) pairs, saved next to
+        # the plan cache at the end of run(): a restarted (or
+        # disaggregated-decode) engine that kept/received the device
+        # pages reloads the index so admissions alias the surviving KV.
+        # Like the plan-cache warm start, a stale/corrupt/mismatched file
+        # must never prevent a cold start.
+        self.prefix_index_path = prefix_index_path
+        if prefix_index_path and os.path.exists(prefix_index_path):
+            try:
+                self.sched.pool.load_index(prefix_index_path)
+            except (ValueError, KeyError, TypeError, OSError,
+                    json.JSONDecodeError) as e:
+                print(f"prefix-index warm start skipped "
+                      f"({prefix_index_path}: {e})")
+
+        # -- speculative decoding (draft-and-verify) ---------------------------
+        # spec_k >= 2 turns each decode step into: draft proposes k-1
+        # tokens (a truncated weight-shared stack by default), the target
+        # scores the whole window in ONE verify_chunk whose GEMMs carry
+        # M = slots*k rows, accepted tokens commit, the first rejection
+        # resamples from the target and rolls the state back.  k < 2 (or
+        # the per-step clamp in _spec_depth) is exactly the vanilla path.
+        self.spec_k = int(spec_k or 0)
+        self._spec_on = self.spec_k >= 2
+        self.draft_cfg: Optional[ArchConfig] = None
+        self.draft_params = None
+        self.spec_k_hist: Dict[int, int] = {}   # verify window k -> steps
+        self._slot_window: Dict[int, np.ndarray] = {}
+        self._draft_pos = np.zeros(slots, np.int32)
+        if self._spec_on:
+            if draft_config is not None:
+                dcfg = draft_config
+            else:
+                dfmt = (draft_format_policy if draft_format_policy
+                        is not None else cfg.format_policy)
+                dcfg = cfg.draft(draft_groups, format_policy=dfmt)
+            # Same serving overrides as the target: paged quantized KV,
+            # grouped decode projections, chunk-time quantization.
+            dcfg = dataclasses.replace(
+                dcfg, cache_quant=False, kv_cache_format=kv_format,
+                decode_qkv_grouped=bool(grouped_qkv))
+            if draft_params is None:
+                # Weight-shared truncation of the (already qkv-stacked)
+                # target params — zero extra parameter memory.
+                draft_params = model_lib.draft_from(
+                    self.params, self.cfg,
+                    groups=dcfg.n_layers // dcfg.period)
+            elif grouped_qkv:
+                draft_params = _stack_decode_qkv(draft_params)
+            self.draft_cfg = dcfg
+            self.draft_params = draft_params
+            self._draft_stateful = any(kind[0] != "attn"
+                                       for kind in dcfg.layer_kinds)
+            # The draft keeps slot-private page stripes (no pool, no
+            # sharing): slot i owns pages [1 + i*maxp, 1 + (i+1)*maxp).
+            maxp = self.sched.max_pages_per_seq
+            tbl = np.empty((slots, maxp), np.int32)
+            for s in range(slots):
+                tbl[s] = 1 + s * maxp + np.arange(maxp, dtype=np.int32)
+            self._draft_table = tbl
+            self.draft_cache = model_lib.init_paged_cache(
+                dcfg, slots, cache_len, num_pages=slots * maxp + 1,
+                page_size=page_size)
+            self._draft_decode = jax.jit(
+                lambda p, b, c: model_lib.decode(p, b, c, self.draft_cfg))
+            self._draft_verify = jax.jit(
+                lambda p, b, c: model_lib.verify_chunk(p, b, c,
+                                                       self.draft_cfg))
+            self._verify = jax.jit(
+                lambda p, b, c: model_lib.verify_chunk(p, b, c, self.cfg))
+            self._draft_chunk_fns: Dict[int, object] = {}
+            self._spec_program = None
+            if self.cfg.use_graph:
+                self._warm_spec_program()
 
         # -- resilience (see repro.serving.resilience) ------------------------
         self.deadline_ms = deadline_ms
@@ -392,6 +474,12 @@ class ServingEngine:
         out = dict(self._responses)
         for r in self.queue + [r for r in self.slot_req if r is not None]:
             out[r.rid] = Response(r.output, rid=r.rid, status="incomplete")
+        if self.prefix_index_path:
+            try:
+                self.sched.pool.save_index(self.prefix_index_path)
+            except OSError as e:  # persistence is best-effort, like plans
+                print(f"prefix-index save skipped "
+                      f"({self.prefix_index_path}: {e})")
         return out
 
     def metrics(self) -> Dict[str, float]:
@@ -410,7 +498,13 @@ class ServingEngine:
                  prefix_hit_pages=pool.prefix_hit_pages,
                  shared_pages=pool.shared_pages,
                  cached_pages=pool.cached_pages,
-                 cow_copies=pool.cow_copies)
+                 cow_copies=pool.cow_copies,
+                 spec_on=int(self._spec_on),
+                 spec_k=self.spec_k)
+        if self.spec_k_hist:
+            steps = sum(self.spec_k_hist.values())
+            m["spec_k_mean"] = (sum(k * n for k, n
+                                    in self.spec_k_hist.items()) / steps)
         return m
 
     # -- scheduler ------------------------------------------------------------
@@ -466,6 +560,11 @@ class ServingEngine:
                 "chunk": cached_tok // self.prefill_chunk,
                 "hashes": entry.hashes,
             }
+            if self._spec_on:
+                # The draft re-derives the slot's whole context from this
+                # window + the outputs; a fresh occupant starts from zero.
+                self._slot_window[slot] = window
+                self._draft_pos[slot] = 0
 
     def step(self):
         """One engine step: up to ``prefill_chunk_quota`` prefill chunks,
@@ -496,21 +595,33 @@ class ServingEngine:
             self.fault.step_begin(self.step_idx, pool=self.sched.pool)
         self._enforce_deadlines()
         self._run_prefill_chunks()
-        for slot in list(self.sched.active):
+        decoding = [s for s, r in enumerate(self.slot_req)
+                    if r is not None and s not in self._prefilling]
+        # Speculation depth for this step: the configured k clamped by
+        # the scheduler's load policy, every slot's horizon room, and the
+        # pages obtainable WITHOUT eviction — a full pool degrades the
+        # step to k=1 (vanilla decode) instead of preempting anyone.
+        k_step = self._spec_depth(decoding) if decoding else 1
+        for slot in decoding:
             if self.slot_req[slot] is None or slot in self._prefilling:
                 continue
             evicted = self.sched.ensure_decode(
-                slot, int(self.slot_pos[slot]) + 1)
+                slot, int(self.slot_pos[slot]) + k_step)
             for vslot, _ventry in evicted:
                 self._clear_slot(vslot)
-        decoding = [s for s, r in enumerate(self.slot_req)
-                    if r is not None and s not in self._prefilling]
+        decoding = [s for s in decoding if self.slot_req[s] is not None
+                    and s not in self._prefilling]
         if not decoding:
             if self.debug_audit:
                 self.sched.pool.audit()
             return
         for slot in decoding:
-            self._cow_guard(slot)
+            self._cow_guard(slot, k_step)
+        if k_step >= 2:
+            self._spec_step(decoding, k_step)
+            if self.debug_audit:
+                self.sched.pool.audit()
+            return
         tokens = np.zeros((self.slots, 1), np.int32)
         table = np.full((self.slots, self.sched.max_pages_per_seq), -1,
                         np.int32)
@@ -634,6 +745,419 @@ class ServingEngine:
             req.output.append(tok)
             self.slot_pos[slot] = self.prefill_len
             self._finished(slot)
+
+    # -- speculative decoding --------------------------------------------------
+    #
+    # Step anatomy (spec_k = k, decoding slots ride batched, inactive
+    # rows masked):
+    #   1. draft catch-up: feed the draft every *known* token it has not
+    #      seen (window prefill via the draft's chunk programs, then
+    #      batched multi-token windows through the draft's verify_chunk —
+    #      all fed tokens are real history, so catch-up always commits);
+    #      the final logits propose draft token d_1.
+    #   2. snapshot the draft cache, then k-2 batched draft decode steps
+    #      feed d_1..d_{k-2} and propose d_2..d_{k-1}.
+    #   3. ONE target verify_chunk scores the window [e, d_1..d_{k-1}]
+    #      (e = the last emitted token, position slot_pos): its GEMMs
+    #      carry M = slots*k rows — the M=1 decode GEMV turned into the
+    #      GEMM shape family the paper's flexible tiles are built for.
+    #   4. accept/reject: greedy keeps drafts while argmax agrees and
+    #      emits the target argmax at the first mismatch (bit-identical
+    #      to vanilla decode); sampled requests run rejection sampling
+    #      (accept d_i w.p. min(1, p_t/p_d); resample the residual on
+    #      reject), which preserves the target distribution exactly.
+    #   5. rollback: rejected positions are *rewound*, never freed —
+    #      paged KV past the accepted point is garbage the next window
+    #      overwrites (pages are position-addressed, CoW-guarded);
+    #      ring/recurrent rows restore their pre-verify state and replay
+    #      the accepted prefix through the same verify program.
+    def _spec_depth(self, decoding) -> int:
+        """This step's window length k: configured ``spec_k``, clamped by
+        the scheduler's ``spec_k`` load policy, each slot's sequence
+        horizon, and the largest window whose extra pages every decoding
+        slot can take from the *free* list — speculation never evicts."""
+        if not self._spec_on or not decoding:
+            return 1
+        k = self.spec_k
+        cap = self.sched.spec_k(len(decoding))
+        if cap is not None:
+            k = min(k, int(cap))
+        for slot in decoding:
+            k = min(k, self.cache_len - int(self.slot_pos[slot]))
+        pool = self.sched.pool
+        while k >= 2:
+            need = 0
+            for slot in decoding:
+                entry = self.sched.active[slot]
+                owned = len(pool.pages_of(entry.arrival))
+                want = -(-(int(self.slot_pos[slot]) + k) // self.page_size)
+                need += max(0, want - owned)
+            if need <= pool.free_pages:
+                break
+            k -= 1
+        return max(1, k)
+
+    def _known_tokens(self, slot: int) -> np.ndarray:
+        """Every token whose position is settled for ``slot``: the
+        admission window (positions [0, prefill_len)) + the emitted
+        output.  Position p holds known[p]; the last emitted token sits
+        at position ``len(known) - 1 == slot_pos`` (not yet in the
+        target cache)."""
+        return np.concatenate([self._slot_window[slot],
+                               np.asarray(self.slot_req[slot].output,
+                                          np.int32)])
+
+    def _draft_chunk_fn(self, chunk_idx: int):
+        fn = self._draft_chunk_fns.get(chunk_idx)
+        if fn is None:
+            pos0 = chunk_idx * self.prefill_chunk
+            fn = jax.jit(lambda p, b, c, _p0=pos0: model_lib.prefill_chunk(
+                p, b, c, self.draft_cfg, pos0=_p0))
+            self._draft_chunk_fns[chunk_idx] = fn
+        return fn
+
+    def _draft_catchup(self, decoding, k) -> Dict[int, np.ndarray]:
+        """Advance the draft to every known token.  Returns per-slot
+        final logits (the proposal distribution for d_1).  Fresh slots
+        prefill their window through the draft's chunk programs (same
+        static shapes as the target's); the remaining tokens feed as
+        batched multi-token windows (grouped by distinct length, ≤ k)
+        through the draft's verify_chunk — real history only, so every
+        window commits and ``_draft_pos`` advances unconditionally."""
+        for slot in decoding:
+            if int(self._draft_pos[slot]) == 0:
+                window = self._slot_window[slot]
+                for c in range(self.n_chunks):
+                    toks = window[c * self.prefill_chunk:
+                                  (c + 1) * self.prefill_chunk]
+                    batch = {
+                        "tokens": jnp.asarray(toks[None]),
+                        "page_table": jnp.asarray(
+                            self._draft_table[slot][None]),
+                        "slot": jnp.int32(slot)}
+                    _, self.draft_cache = self._draft_chunk_fn(c)(
+                        self.draft_params, batch, self.draft_cache)
+                self._draft_pos[slot] = self.prefill_len
+        last: Dict[int, np.ndarray] = {}
+        known = {s: self._known_tokens(s) for s in decoding}
+        while True:
+            rem = {s: len(known[s]) - int(self._draft_pos[s])
+                   for s in decoding if len(known[s]) > self._draft_pos[s]}
+            if not rem:
+                return last
+            length = min(min(rem.values()), k)
+            rows = sorted(rem)
+            logits = self._draft_window(rows, length, known)
+            for s in rows:
+                self._draft_pos[s] += length
+                if int(self._draft_pos[s]) == len(known[s]):
+                    last[s] = logits[s, length - 1]
+
+    def _draft_window(self, rows, length, known) -> np.ndarray:
+        """One batched draft verify_chunk feeding ``length`` known tokens
+        for ``rows`` (other rows masked).  Returns (slots, length, V)."""
+        tokens = np.zeros((self.slots, length), np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        table = np.full_like(self._draft_table, -1)
+        rv = np.zeros(self.slots, bool)
+        for s in rows:
+            dp = int(self._draft_pos[s])
+            tokens[s] = known[s][dp:dp + length]
+            pos[s] = dp
+            table[s] = self._draft_table[s]
+            rv[s] = True
+        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+                 "page_table": jnp.asarray(table)}
+        if self._draft_stateful:
+            batch["row_valid"] = jnp.asarray(rv)
+        logits, self.draft_cache = self._draft_verify(
+            self.draft_params, batch, self.draft_cache)
+        return np.asarray(logits, np.float32)
+
+    def _propose(self, logits: np.ndarray, req: Request) -> int:
+        """Sample one draft proposal from the draft's distribution
+        (argmax for greedy requests — rejection sampling needs the
+        proposal drawn from the same p_d it divides by)."""
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(logits) / req.temperature))
+
+    def _draft_propose(self, decoding, k):
+        """Draft k-1 proposals per decoding slot.  Returns (proposals,
+        draft_logits, snapshot): per-slot proposal token lists, the draft
+        logits each was drawn from (rejection sampling divides by them),
+        and the post-catch-up draft cache (the rollback point —
+        ``_draft_pos`` stays at the catch-up position until acceptance
+        is known)."""
+        last = self._draft_catchup(decoding, k)
+        snapshot = self.draft_cache
+        proposals = {s: [] for s in decoding}
+        dlogits = {s: [] for s in decoding}
+        cur = last
+        for i in range(k - 1):
+            for s in decoding:
+                proposals[s].append(self._propose(cur[s], self.slot_req[s]))
+                dlogits[s].append(cur[s])
+            if i == k - 2:
+                break
+            tokens = np.zeros((self.slots, 1), np.int32)
+            pos = np.zeros(self.slots, np.int32)
+            table = np.full_like(self._draft_table, -1)
+            rv = np.zeros(self.slots, bool)
+            for s in decoding:
+                tokens[s, 0] = proposals[s][-1]
+                pos[s] = int(self._draft_pos[s]) + i
+                table[s] = self._draft_table[s]
+                rv[s] = True
+            batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+                     "page_table": jnp.asarray(table)}
+            if self._draft_stateful:
+                batch["row_valid"] = jnp.asarray(rv)
+            logits, self.draft_cache = self._draft_decode(
+                self.draft_params, batch, self.draft_cache)
+            logits = np.asarray(logits, np.float32)
+            cur = {s: logits[s] for s in decoding}
+        return proposals, dlogits, snapshot
+
+    @staticmethod
+    def _softmax(x: np.ndarray) -> np.ndarray:
+        x = x - x.max()
+        e = np.exp(x)
+        return e / e.sum()
+
+    def _accept(self, logits: np.ndarray, proposals, dlogits, req: Request):
+        """Decide the emitted tokens for one slot from its (k, V) target
+        logits.  Returns (emit, j): ``j`` accepted drafts followed by one
+        resampled/bonus token — a speculative step always emits j+1 ≥ 1.
+
+        Greedy: accept while the target argmax agrees; the first
+        disagreement emits the target argmax — the exact token vanilla
+        decode would have produced (logits row i-1 is bit-identical to a
+        vanilla step at that position).  Sampled: canonical rejection
+        sampling — accept d w.p. min(1, p_t(d)/p_d(d)); on reject draw
+        from the normalized residual max(0, p_t − p_d), which makes the
+        emitted marginal exactly p_t regardless of the draft."""
+        k = len(proposals) + 1
+        emit: List[int] = []
+        if req.temperature <= 0.0:
+            for i in range(k - 1):
+                t = int(np.argmax(logits[i]))
+                emit.append(t)
+                if t != proposals[i]:
+                    return emit, i
+            emit.append(int(np.argmax(logits[k - 1])))
+            return emit, k - 1
+        temp = req.temperature
+        for i in range(k - 1):
+            pt = self._softmax(logits[i] / temp)
+            pd = self._softmax(dlogits[i] / temp)
+            d = proposals[i]
+            self._key, sub = jax.random.split(self._key)
+            if float(jax.random.uniform(sub)) < min(
+                    1.0, float(pt[d]) / max(float(pd[d]), 1e-30)):
+                emit.append(d)
+                continue
+            res = np.maximum(pt - pd, 0.0)
+            if res.sum() <= 0.0:
+                res = pt
+            self._key, sub = jax.random.split(self._key)
+            emit.append(int(jax.random.categorical(
+                sub, jnp.log(jnp.asarray(res / res.sum()) + 1e-30))))
+            return emit, i
+        self._key, sub = jax.random.split(self._key)
+        emit.append(int(jax.random.categorical(
+            sub, jnp.asarray(logits[k - 1]) / temp)))
+        return emit, k - 1
+
+    def _spec_step(self, decoding, k):
+        """One draft-and-verify decode step over the decoding slots."""
+        proposals, dlogits, draft_snap = self._draft_propose(decoding, k)
+        target_snap = self.cache
+        tokens = np.zeros((self.slots, k), np.int32)
+        pos = np.zeros(self.slots, np.int32)
+        table = np.full((self.slots, self.sched.max_pages_per_seq), -1,
+                        np.int32)
+        rv = np.zeros(self.slots, bool)
+        for s in decoding:
+            req = self.slot_req[s]
+            tokens[s, 0] = req.output[-1]   # last emitted, not yet cached
+            tokens[s, 1:] = proposals[s]
+            pos[s] = self.slot_pos[s]
+            table[s] = self.sched.table_row(s)
+            rv[s] = True
+        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+                 "page_table": jnp.asarray(table)}
+        if self._stateful_rows:
+            batch["row_valid"] = jnp.asarray(rv)
+        logits, self.cache = self._verify(self.params, batch, self.cache)
+        logits = np.array(jnp.asarray(logits, jnp.float32))  # (slots, k, V)
+        self.spec_k_hist[k] = self.spec_k_hist.get(k, 0) + 1
+        if self.fault is not None:
+            for s in decoding:
+                val = self.fault.poison_value(self.step_idx,
+                                              self.slot_req[s].rid)
+                if val is not None:
+                    logits[s] = val
+        if self.quarantine:
+            healthy = []
+            for s in decoding:
+                if np.isfinite(logits[s]).all():
+                    healthy.append(s)
+                else:
+                    req = self.slot_req[s]
+                    self._cancel_active(s, PoisonedOutput(
+                        f"non-finite logits for rid={req.rid} at step "
+                        f"{self.step_idx}", rid=req.rid))
+            decoding = healthy
+        drafted = accepted = emitted = 0
+        partial: Dict[int, int] = {}      # slot -> accepted-prefix length
+        draft_rollback: List[int] = []
+        for s in decoding:
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            emit, j = self._accept(logits[s], proposals[s], dlogits[s], req)
+            drafted += k - 1
+            accepted += j
+            done = False
+            for t in emit:
+                req.output.append(int(t))
+                self.slot_pos[s] += 1
+                emitted += 1
+                if self._finished(s):
+                    done = True
+                    break
+            if not done and int(self.slot_pos[s]) >= self.cache_len:
+                self._record_done(req)
+                self.slot_req[s] = None
+                self.slot_pos[s] = 0
+                self.sched.release(s, finished=True)
+                done = True
+            if done:
+                self._draft_pos[s] = 0
+                self._slot_window.pop(s, None)
+            elif j == k - 1:
+                # Full acceptance: every verified token was real, both
+                # caches are exact.  The draft saw d_1..d_{k-2}, so it
+                # sits k-2 past its catch-up point.
+                self._draft_pos[s] += k - 2
+            else:
+                # Rejection at draft j+1: target pages past the accepted
+                # point hold garbage the next window overwrites; only the
+                # sequential (ring/recurrent) rows need the snapshot +
+                # replay of the j+1 real tokens [e, d_1..d_j].
+                partial[s] = j + 1
+                draft_rollback.append(s)
+        if draft_rollback and self._draft_stateful:
+            self.draft_cache = self._merge_rows(self.draft_cache,
+                                                draft_snap, draft_rollback)
+        if partial and self._stateful_rows:
+            self.cache = self._merge_rows(self.cache, target_snap,
+                                          list(partial))
+            self._replay(partial)
+        self.sched.note_spec_step(len(decoding), drafted, accepted, emitted)
+
+    def _merge_rows(self, cur, snap, rows):
+        """Restore batch rows ``rows`` of every *batch-axis* cache leaf
+        (ring/RG-LRU/SSD state) from ``snap``; paged slabs pass through
+        untouched — their rollback is positional, not row-wise.  Grouped
+        slabs carry the batch axis after the scan axis."""
+        sel = np.zeros(self.slots, bool)
+        sel[rows] = True
+        sel = jnp.asarray(sel)
+
+        def merge_layer(c_layer, s_layer, axis):
+            if isinstance(c_layer, dict) and "k_pages" in c_layer:
+                return c_layer
+
+            def m(c, s):
+                mask = sel.reshape((1,) * axis + (-1,)
+                                   + (1,) * (c.ndim - axis - 1))
+                return jnp.where(mask, s.astype(c.dtype), c)
+            return jax.tree.map(m, c_layer, s_layer)
+
+        groups = cur["groups"]
+        if groups is not None:
+            groups = tuple(merge_layer(c, s, 1)
+                           for c, s in zip(cur["groups"], snap["groups"]))
+        tail = [merge_layer(c, s, 0)
+                for c, s in zip(cur["tail"], snap["tail"])]
+        return {"groups": groups, "tail": tail}
+
+    def _replay(self, partial: Dict[int, int]):
+        """Re-run the accepted prefix of partially-accepted rows through
+        the verify program (grouped by distinct prefix length, other rows
+        masked) so ring/recurrent state lands exactly where sequential
+        decode would have left it.  Paged rewrites are idempotent — same
+        tokens, same positions, same quantization — so replay is safe to
+        run over the shared pool."""
+        for length in sorted(set(partial.values())):
+            rows = [s for s, n_real in partial.items() if n_real == length]
+            tokens = np.zeros((self.slots, length), np.int32)
+            pos = np.zeros(self.slots, np.int32)
+            table = np.full((self.slots, self.sched.max_pages_per_seq), -1,
+                            np.int32)
+            rv = np.zeros(self.slots, bool)
+            for s in rows:
+                out = self.slot_req[s].output
+                tokens[s] = out[-(length + 1):-1]   # [e, d_1..d_j]
+                pos[s] = int(self.slot_pos[s]) - length
+                table[s] = self.sched.table_row(s)
+                rv[s] = True
+            batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
+                     "page_table": jnp.asarray(table),
+                     "row_valid": jnp.asarray(rv)}
+            _, self.cache = self._verify(self.params, batch, self.cache)
+
+    def _warm_spec_program(self):
+        """Compile the speculative step's GEMM pipeline — the draft's
+        grouped q/k/v decode projection, the target's grouped verify
+        projection (M = slots*k), and the verify unembedding — as ONE
+        merged ``repro.graph`` program.  The scheduler sees the whole
+        draft+verify pipeline in one graph (grouping and tile
+        stabilization score across both models), and on the kernel
+        backend the compile grants every node's plan up front, so the
+        first real verify chunk lands on warm plans instead of solving
+        them on the hot path."""
+        from repro.graph import schedule as graph_schedule
+        from repro.graph.trace import GraphBuilder, merge_graphs
+        from repro.models.layers import model_format
+
+        cfg, dcfg = self.cfg, self.draft_cfg
+        cdt = str(jnp.dtype(cfg.compute_dtype))
+        wdt = str(jnp.dtype(cfg.param_dtype))
+        mv = self.slots * self.spec_k
+
+        def build():
+            graphs = []
+            for m, c, tag in ((self.slots, dcfg, "draft"),
+                              (mv, cfg, "verify")):
+                fmt = model_format(c)
+                nq = c.n_heads * c.hd
+                nkv = c.n_kv_heads * c.hd
+                b = GraphBuilder()
+                xv = b.input((m, c.d_model), cdt, f"{tag}_x")
+                wv = b.input((3, c.d_model, nq), wdt, f"{tag}_qkv")
+                outs = b.group(xv, stacked=wv, widths=(nq, nkv, nkv),
+                               fmt=fmt.name, out_dtype=cdt,
+                               policy=c.gemm_policy)
+                b.output(*outs)
+                graphs.append(b.build())
+            b = GraphBuilder()
+            xv = b.input((mv, cfg.d_model), cdt, "verify_h")
+            wv = b.input((cfg.d_model, cfg.vocab), wdt, "unembed")
+            b.output(b.gemm(xv, wv, fmt=model_format(cfg).name,
+                            out_dtype="float32", policy=cfg.gemm_policy))
+            graphs.append(b.build())
+            return merge_graphs(*graphs)
+
+        key = ("spec_step", cfg.name, dcfg.name, self.slots, self.spec_k,
+               cfg.format_policy, dcfg.format_policy, cdt, wdt,
+               cfg.gemm_policy)
+        self._spec_program = graph_schedule.compile_cached(
+            key, build, backend=cfg.gemm_backend)
 
     # -- request-level containment ---------------------------------------------
     def _record_done(self, req: Request, status: str = "ok",
@@ -778,24 +1302,30 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
         self._prefilling.pop(slot, None)
+        self._draft_pos[slot] = 0
+        self._slot_window.pop(slot, None)
 
-    def _cow_guard(self, slot: int):
-        """Copy-on-write: decode is about to write ``slot``'s next token
-        into logical page pos // page_size — if that physical page is
-        shared (refcount > 1), re-own it onto a fresh page and copy the
-        device-side content first.  Structurally unreachable under the
+    def _cow_guard(self, slot: int, n_tokens: int = 1):
+        """Copy-on-write: decode is about to write ``slot``'s next
+        ``n_tokens`` tokens into the logical pages covering
+        [pos, pos + n_tokens) — any shared (refcount > 1) physical page
+        in that range is re-owned onto a fresh page with its device-side
+        content copied first.  Structurally unreachable under the
         chunk-aligned aliasing cap (shared pages always precede the
         recompute window, decode writes always follow it), but enforced
         rather than assumed."""
         entry = self.sched.active.get(slot)
         if entry is None:
             return
-        idx = int(self.slot_pos[slot]) // self.page_size
-        pages = self.sched.pool.pages_of(entry.arrival)
-        if idx >= len(pages) or self.sched.pool.ref_of(pages[idx]) <= 1:
-            return
-        old, new = self.sched.pool.make_private(entry.arrival, idx)
-        self._copy_page(old, new)
+        pos = int(self.slot_pos[slot])
+        first = pos // self.page_size
+        last = (pos + n_tokens - 1) // self.page_size
+        for idx in range(first, last + 1):
+            pages = self.sched.pool.pages_of(entry.arrival)
+            if idx >= len(pages) or self.sched.pool.ref_of(pages[idx]) <= 1:
+                continue
+            old, new = self.sched.pool.make_private(entry.arrival, idx)
+            self._copy_page(old, new)
 
     def _copy_page(self, old: int, new: int):
         """Duplicate one physical page's content across every paged

@@ -421,6 +421,46 @@ class KVPagePool:
             restored += 1
         return restored
 
+    def save_index(self, path) -> int:
+        """Persist the content index as JSON — the host half of a
+        cross-engine prefix-cache handoff (a restarted or disaggregated
+        decode engine that kept/received the device pages reloads it with
+        :meth:`load_index`).  Geometry is stored so a mismatched pool
+        refuses the file instead of aliasing wrong pages.  Returns the
+        number of entries written.
+        """
+        import json
+        entries = self.registrations()
+        payload = {"version": 1, "num_pages": self.num_pages,
+                   "page_size": self.page_size, "registrations": entries}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        import os
+        os.replace(tmp, path)
+        return len(entries)
+
+    def load_index(self, path) -> int:
+        """Re-seed the content index from a :meth:`save_index` file via
+        the :meth:`restore_registrations` rules (plain-free pages only).
+        Returns the number restored; 0 for a missing file.  Raises
+        ``ValueError`` on pool-geometry mismatch.
+        """
+        import json
+        import os
+        if not os.path.exists(path):
+            return 0
+        with open(path) as f:
+            payload = json.load(f)
+        if (payload.get("num_pages") != self.num_pages
+                or payload.get("page_size") != self.page_size):
+            raise ValueError(
+                f"prefix index {path} was saved for a "
+                f"{payload.get('num_pages')}x{payload.get('page_size')} "
+                f"pool, this pool is {self.num_pages}x{self.page_size}")
+        pairs = [(int(p), str(h)) for p, h in payload["registrations"]]
+        return self.restore_registrations(pairs)
+
     # -- device-side view ------------------------------------------------------
     def table_row(self, key: Optional[int], max_pages: int) -> np.ndarray:
         """The (max_pages,) int32 page-table row for one sequence.

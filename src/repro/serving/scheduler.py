@@ -118,6 +118,12 @@ class ContinuousBatchingScheduler:
         self.completed_requests = 0
         self.cancelled_requests = 0   # structured per-request failures
         self.shed_requests = 0        # rejected at submit (engine-counted)
+        # speculative decoding (engine reports via note_spec_step)
+        self.spec_steps = 0
+        self.spec_drafted = 0         # draft tokens offered for verification
+        self.spec_accepted = 0        # draft tokens the target accepted
+        self.spec_emitted = 0         # tokens emitted by spec steps
+        #                               (accepted + resample/bonus)
 
     # -- queue -----------------------------------------------------------------
     def submit(self, req) -> ScheduledRequest:
@@ -173,6 +179,41 @@ class ContinuousBatchingScheduler:
         :meth:`_pick_admit` to trade first-token latency against decode
         throughput."""
         return 1 if n_decoding else self.slots
+
+    def spec_k(self, n_decoding: int) -> Optional[int]:
+        """Policy hook: cap on this step's speculation depth (window
+        tokens per slot, draft proposals + 1).  A speculative step
+        commits up to ``k − 1`` extra page slots per sequence *before*
+        knowing how many tokens the target accepts, so depth is load
+        traffic the policy should shed first: the default halves the
+        configured k (engine-side) whenever free pages cannot cover a
+        full-depth window for every decoding slot, by returning the
+        depth that fits.  The engine additionally clamps per-slot (page
+        availability without eviction, sequence-horizon room) and floors
+        at 1 — k=1 is exactly vanilla decode, so a full pool degrades to
+        non-speculative steps instead of evicting.  Return ``None`` for
+        "no policy cap"."""
+        if not n_decoding:
+            return None
+        per_slot = (self.pool.free_pages // n_decoding
+                    if self.pool.free_pages else 0)
+        # Each extra window token may need at most one fresh page.
+        return max(1, per_slot * self.page_size + 1)
+
+    def note_spec_step(self, n_active: int, drafted: int, accepted: int,
+                       emitted: int) -> None:
+        """Account one speculative decode step: ``drafted`` proposals
+        verified, ``accepted`` of them kept, ``emitted`` tokens appended
+        across ``n_active`` slots (emitted ≥ n_active — every slot gets
+        at least its resampled/bonus token, so a spec step is never worse
+        than a vanilla step in tokens)."""
+        self.decode_steps += 1
+        self.active_step_sum += n_active
+        self.decode_tokens += emitted
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
 
     # -- admission -------------------------------------------------------------
     def _usable_prefix(self, matched_pages: int, prefill_len: int
@@ -334,6 +375,14 @@ class ContinuousBatchingScheduler:
             "completed_requests": self.completed_requests,
             "cancelled_requests": self.cancelled_requests,
             "shed_requests": self.shed_requests,
+            "spec_steps": self.spec_steps,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "accepted_per_step": (self.spec_accepted / self.spec_steps
+                                  if self.spec_steps else 0.0),
+            "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
         }
 
 

@@ -1,0 +1,249 @@
+"""Speculative decoding: greedy bit-identity with vanilla decode,
+rejection-sampling distribution invariance, rewind correctness under
+eviction/chaos, load-degraded speculation depth, and the prefix-index
+persistence that rides along in this PR."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import KVPagePool
+from repro.serving.resilience import Fault, FaultInjector
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+def _tiny(name):
+    """Both target archs shrunk to test scale with ≥ 2 scan groups, so
+    the default draft (first group, weight-shared) is a real truncation
+    that gets rejected often — the rewind path is the test subject."""
+    cfg = get_config(name).reduced()
+    return dataclasses.replace(cfg, n_layers=2 * cfg.period, d_model=64,
+                               d_ff=128, vocab=128, n_heads=2,
+                               n_kv_heads=1, head_dim=32)
+
+
+def _submit_shared(engine, cfg, n=3, seed=5, max_tokens=12):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, 20, dtype=np.int32)
+    for rid in range(n):
+        tail = rng.integers(0, cfg.vocab, 4 + 2 * rid, dtype=np.int32)
+        engine.submit(Request(rid=rid,
+                              prompt=np.concatenate([shared, tail]),
+                              max_tokens=max_tokens))
+
+
+def _run(params, cfg, spec_k, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", 96)
+    kw.setdefault("prefill_len", 32)
+    kw.setdefault("page_size", 16)
+    eng = ServingEngine(params, cfg, spec_k=spec_k, debug_audit=True, **kw)
+    _submit_shared(eng, cfg)
+    out = eng.run(max_steps=300)
+    return {rid: list(r) for rid, r in out.items()}, eng
+
+
+# -- greedy bit-identity ------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma2_27b", "recurrentgemma_9b"])
+def test_greedy_bit_identical_to_vanilla(arch):
+    """The acceptance bar: speculative greedy output must be the same
+    token stream vanilla decode produces, bit for bit — acceptance reads
+    the exact logits a vanilla step would compute, and rejected drafts
+    rewind without a trace (including the ring/recurrent replay path on
+    gemma2's local layers and recurrentgemma's RG-LRU rows)."""
+    cfg = _tiny(arch)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    vanilla, _ = _run(params, cfg, spec_k=0)
+    spec, eng = _run(params, cfg, spec_k=4)
+    assert spec == vanilla
+    m = eng.metrics()
+    assert m["spec_steps"] > 0
+    assert 0.0 < m["acceptance_rate"] < 1.0  # rejections were exercised
+    eng.sched.pool.audit()
+
+
+def test_spec_step_emits_multiple_tokens_on_agreement():
+    """When draft == target (draft_groups = all groups), every proposal
+    is accepted and each verify step emits the full window."""
+    cfg = _tiny("gemma2_27b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    vanilla, _ = _run(params, cfg, spec_k=0)
+    spec, eng = _run(params, cfg, spec_k=4, draft_groups=2)
+    assert spec == vanilla
+    m = eng.metrics()
+    assert m["acceptance_rate"] == 1.0
+    # k-1 drafts kept per slot every step (the counter sums over slots)
+    assert m["accepted_per_step"] >= 3.0
+
+
+# -- rejection sampling preserves the target distribution ---------------------
+
+
+def test_rejection_sampling_matches_target_marginal():
+    """Seeded stats: the first emitted token of a speculative step is
+    distributed per the TARGET softmax, whatever the draft proposes —
+    the canonical accept-w.p.-min(1, p_t/p_d) + residual-resample
+    invariance, checked empirically against both a close and a hostile
+    draft distribution."""
+    cfg = _tiny("gemma2_27b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, slots=1, cache_len=64,
+                        prefill_len=32, seed=123)
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), temperature=1.0)
+    rng = np.random.default_rng(0)
+    V, k = 8, 3
+    t_logits = rng.normal(size=V) * 2.0
+    p_t = np.exp(t_logits - t_logits.max())
+    p_t /= p_t.sum()
+    for d_logits in [t_logits + rng.normal(size=V) * 0.5,  # decent draft
+                     -2.0 * t_logits]:                      # hostile draft
+        trials = 4000
+        counts = np.zeros(V)
+        logits = np.tile(t_logits, (k, 1))
+        dlog = np.tile(d_logits, (k, 1))
+        for _ in range(trials):
+            props = [eng._propose(d_logits, req) for _ in range(k - 1)]
+            emit, _ = eng._accept(logits, props, dlog, req)
+            counts[emit[0]] += 1
+        emp = counts / trials
+        np.testing.assert_allclose(emp, p_t, atol=0.035)
+
+
+# -- rewind under eviction / chaos --------------------------------------------
+
+
+def test_spec_outputs_survive_eviction_rewind():
+    """Overcommitted pool: eviction fires while speculation is active.
+    The evicted request resumes through re-prefill (its window covers
+    its whole context here), so greedy outputs must still match the
+    uncontended vanilla run — and the pool audit stays green."""
+    cfg = _tiny("gemma2_27b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    # prompt + output fits in the prefill window -> eviction-invariant
+    kw = dict(slots=2, cache_len=96, prefill_len=64, page_size=16)
+    van, _ = _run(params, cfg, spec_k=0, **kw)
+    # usable pages 8: two prefills fill the pool; the first decode
+    # growth must evict the youngest occupant, which later resumes.
+    spec, eng = _run(params, cfg, spec_k=4, num_pages=9, **kw)
+    m = eng.metrics()
+    assert m["preemptions"] > 0, "pool must have been overcommitted"
+    assert m["spec_steps"] > 0, "speculation must have run around it"
+    assert spec == van
+    eng.sched.pool.audit()
+
+
+def test_poisoned_slot_quarantined_only_under_spec():
+    """poison_logits against one rid during speculative decode: that
+    request is cancelled with status 'poisoned'; every other request's
+    tokens are bit-identical to a fault-free speculative run."""
+    cfg = _tiny("gemma2_27b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    clean, _ = _run(params, cfg, spec_k=4)
+
+    eng = ServingEngine(params, cfg, slots=2, cache_len=96,
+                        prefill_len=32, page_size=16, spec_k=4,
+                        debug_audit=True,
+                        fault=FaultInjector(
+                            [Fault("poison_logits", rid=0, step=6)]))
+    _submit_shared(eng, cfg)
+    out = eng.run(max_steps=300)
+    assert out[0].status == "poisoned"
+    assert len(out[0]) < len(clean[0])  # partial output returned
+    for rid in (1, 2):
+        assert out[rid].status == "ok"
+        assert list(out[rid]) == clean[rid]
+    eng.sched.pool.audit()
+
+
+# -- load-degraded speculation depth ------------------------------------------
+
+
+def test_scheduler_spec_k_degrades_on_full_pool():
+    """Unit: the spec_k policy hook returns depth 1 (vanilla decode)
+    when the free list is empty — speculation sheds before anything
+    else, and never causes an eviction."""
+    sched = ContinuousBatchingScheduler(slots=2, max_seq_len=64,
+                                        page_size=8, num_pages=8)
+    assert sched.spec_k(0) is None          # no decoders: no cap needed
+    assert sched.spec_k(1) > 1              # empty pool: plenty of room
+    assert sched.pool.ensure(0, sched.pool.free_pages * 8)  # drain it
+    assert sched.pool.free_pages == 0
+    assert sched.spec_k(1) == 1
+    assert sched.spec_k(2) == 1
+
+
+def test_full_pool_degrades_spec_without_evicting():
+    """Integration: a pool sized so decode growth drains the free list
+    forces k -> 1 steps (spec_steps < decode_steps) but never a
+    preemption; outputs still match the vanilla engine on the same
+    geometry."""
+    cfg = _tiny("gemma2_27b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    # usable pages 6 = 2 slots x (2 prefill + 1 growth): the free list
+    # hits zero as soon as both slots grow past the window.
+    kw = dict(slots=2, cache_len=64, prefill_len=32, page_size=16,
+              num_pages=7)
+    van, _ = _run(params, cfg, spec_k=0, **kw)
+    spec, eng = _run(params, cfg, spec_k=4, **kw)
+    assert spec == van
+    m = eng.metrics()
+    assert m["preemptions"] == 0, "depth must shed before eviction"
+    assert 0 < m["spec_steps"] < m["decode_steps"], \
+        "some steps must have degraded to vanilla (k=1)"
+
+
+# -- prefix-index persistence -------------------------------------------------
+
+
+def test_pool_prefix_index_roundtrip(tmp_path):
+    pool = KVPagePool(num_pages=8, page_size=4)
+    assert pool.ensure(0, 12)  # 3 pages
+    pool.register(0, 0, "h0")
+    pool.register(0, 1, "h1")
+    path = str(tmp_path / "prefix.json")
+    assert pool.save_index(path) == 2
+    fresh = KVPagePool(num_pages=8, page_size=4)
+    assert fresh.load_index(path) == 2
+    assert fresh.lookup_prefix(["h0", "h1"]) == 2
+    fresh.audit()
+    # geometry mismatch must refuse (a stale file from another engine)
+    other = KVPagePool(num_pages=4, page_size=4)
+    with pytest.raises(ValueError):
+        other.load_index(path)
+    # missing file is a silent cold start
+    assert KVPagePool(8, 4).load_index(str(tmp_path / "nope.json")) == 0
+
+
+def test_prefix_index_warm_starts_second_engine(tmp_path):
+    """Cross-engine prefix cache: engine 1 publishes its prefill pages
+    and saves the index at the end of run(); engine 2 (same geometry,
+    handed the surviving device cache) reloads it and aliases the
+    shared prefix instead of recomputing — outputs identical."""
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              n_layers=2, d_model=64, d_ff=128, vocab=128,
+                              n_heads=2, n_kv_heads=1, head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "prefix.json")
+    prompt = np.random.default_rng(9).integers(0, 128, 32, dtype=np.int32)
+
+    kw = dict(slots=2, cache_len=64, prefill_len=32, page_size=8,
+              prefill_chunk=8, prefix_index_path=path)
+    eng1 = ServingEngine(params, cfg, **kw)
+    eng1.submit(Request(rid=0, prompt=prompt, max_tokens=8))
+    out1 = eng1.run()
+    assert os.path.exists(path)
+
+    eng2 = ServingEngine(params, cfg, **kw)
+    eng2.cache = eng1.cache  # device pages survive the restart
+    eng2.submit(Request(rid=1, prompt=prompt, max_tokens=8))
+    out2 = eng2.run()
+    assert list(out2[1]) == list(out1[0])
+    assert eng2.sched.pool.prefix_hit_pages > 0, \
+        "second engine must alias the reloaded prefix pages"
