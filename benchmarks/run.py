@@ -553,6 +553,79 @@ def serving_resilience_rows(smoke: bool = True):
     ]
 
 
+def serving_latency_rows(smoke: bool = True):
+    """Serving-latency section: TTFT / inter-token / queue-wait
+    percentiles from the telemetry registry, measured over one traced
+    serving run (speculative decode k=2, chunked prefill with the prefix
+    cache on, one injected poison fault — the full hot path).
+
+    Also exports the run's Chrome/Perfetto trace to ``BENCH_trace.json``
+    (CI validates the schema and uploads it next to ``BENCH_gemm.json``).
+    Wall-clock percentiles are machine-dependent, so the regression
+    guard only pins their presence (>= 0) plus the deterministic
+    ``requests_measured`` count.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving import Request, ServingEngine
+    from repro.serving.resilience import Fault, FaultInjector
+    from repro.telemetry import tracing
+    from repro.telemetry.registry import registry, reset_registry
+
+    cfg = get_config("gemma_2b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                              vocab=128, n_heads=2, n_kv_heads=1,
+                              head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 6 if smoke else 12
+    max_tokens = 8 if smoke else 16
+
+    reset_registry()   # section isolation: only this run's samples
+    tracer = tracing.install(tracing.Tracer())
+    try:
+        eng = ServingEngine(
+            params, cfg, slots=2, cache_len=64, prefill_len=16,
+            prefill_chunk=8, page_size=8, prefix_cache=True, spec_k=2,
+            fault=FaultInjector([Fault("poison_logits", rid=1, step=4)]))
+        shared = rng.integers(0, cfg.vocab, size=8, dtype=np.int32)
+        for rid in range(n_req):
+            eng.submit(Request(
+                rid=rid,
+                prompt=np.concatenate([shared, rng.integers(
+                    0, cfg.vocab, size=6, dtype=np.int32)]),
+                max_tokens=max_tokens))
+        out = eng.run()
+    finally:
+        tracing.uninstall()
+    tracer.export("BENCH_trace.json")
+
+    reg = registry()
+    ttft = reg.get("serving.ttft_s")
+    itl = reg.get("serving.inter_token_s")
+    wait = reg.get("serving.queue_wait_s")
+    measured = sum(1 for r in out.values()
+                   if r.metrics and "ttft_s" in r.metrics)
+
+    def pct(h, p):
+        return h.percentile(p) * 1e3 if h is not None and h.count else 0.0
+
+    return [
+        ("serving.latency.ttft_p50_ms", "", f"{pct(ttft, 50):.3f}"),
+        ("serving.latency.ttft_p99_ms", "", f"{pct(ttft, 99):.3f}"),
+        ("serving.latency.itl_p50_ms", "", f"{pct(itl, 50):.3f}"),
+        ("serving.latency.itl_p99_ms", "", f"{pct(itl, 99):.3f}"),
+        ("serving.latency.queue_wait_p50_ms", "",
+         f"{pct(wait, 50):.3f}"),
+        ("serving.latency.requests_measured", "", f"{measured}"),
+    ]
+
+
 # -- bench-regression guard ----------------------------------------------------
 
 # (key, minimum, maximum-ratio-vs-baseline, absolute-minimum): only
@@ -575,6 +648,15 @@ REGRESSION_RULES = [
     ("serving.resilience.shed_rate_2x",           None, None, 0.45),
     ("serving.resilience.recovery_steps",         None, 1.00, None),
     ("serving.resilience.audit_ok",               None, None, 1.00),
+    # Latency percentiles are wall-clock (machine-dependent): the guard
+    # only pins that the section exists and parses; the request count
+    # is scheduler-deterministic (n_req minus the poisoned request).
+    ("serving.latency.ttft_p50_ms",               None, None, 0.0),
+    ("serving.latency.ttft_p99_ms",               None, None, 0.0),
+    ("serving.latency.itl_p50_ms",                None, None, 0.0),
+    ("serving.latency.itl_p99_ms",                None, None, 0.0),
+    ("serving.latency.queue_wait_p50_ms",         None, None, 0.0),
+    ("serving.latency.requests_measured",         None, None, 5.0),
 ]
 
 
@@ -742,6 +824,9 @@ def main() -> None:
 
     # -- resilience: degraded mode, load shedding, crash recovery ----------------
     csv_rows.extend(serving_resilience_rows(smoke=args.smoke))
+
+    # -- latency percentiles from the telemetry registry (traced run) ------------
+    csv_rows.extend(serving_latency_rows(smoke=args.smoke))
 
     # -- roofline (if dry-run artifacts exist) --------------------------------------
     if not args.smoke:

@@ -97,6 +97,18 @@ def _substrate() -> str:
     return jax.default_backend()
 
 
+def _note_plan(sig: "GemmSignature", source: str, predicted_s: float) -> None:
+    """Tell the active per-GEMM accountant (repro.telemetry) where this
+    signature's grant came from.  ``source`` is ``"cache-hit"`` for a
+    memoized grant, the plan's own source otherwise — the provenance the
+    dispatch-side record joins against.  No-op when no accountant is
+    installed (the common case)."""
+    from repro.telemetry import gemm_account
+    acct = gemm_account.active()
+    if acct is not None:
+        acct.note_plan(sig, source, predicted_s)
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmSignature:
     """The cache key: everything that changes which plan wins.
@@ -456,13 +468,16 @@ class PlanCache:
                 self.stats.hits += 1
                 plan = self._build(sig, measure=True, interpret=interpret)
                 self._insert(sig, plan)
+                _note_plan(sig, "cache-hit", plan.predicted_s)
                 return plan
             self.stats.hits += 1
             self._plans.move_to_end(sig)
+            _note_plan(sig, "cache-hit", hit.predicted_s)
             return hit
         self.stats.misses += 1
         plan = self._build(sig, measure=measure, interpret=interpret)
         self._insert(sig, plan)
+        _note_plan(sig, plan.source, plan.predicted_s)
         return plan
 
     def _build(self, sig: GemmSignature, *, measure: bool,
@@ -677,11 +692,13 @@ def plan_with_geometry(m: int, n: int, k: int, dtype_in, dtype_out=None, *,
     dtype_out = dtype_out if dtype_out is not None else dtype_in
     sig = GemmSignature.make(m, n, k, dtype_in, dtype_out, epilogue,
                              policy, backend, group, fmt)
-    return ExecutionPlan(signature=sig, geometry=geometry,
+    plan = ExecutionPlan(signature=sig, geometry=geometry,
                          route=_route_for(sig, geometry),
                          predicted_s=score_geometry(
                              sig, geometry, _GLOBAL.profile, _GLOBAL.n_cores),
                          source="program")
+    _note_plan(sig, "program", plan.predicted_s)
+    return plan
 
 
 def save_plans(path: str) -> None:

@@ -153,15 +153,18 @@ def mte_gemm(a, b, c=None, bias=None, *,
         return ops.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
                             policy=policy, out_dtype=out_dtype,
                             format_policy=fmt, interpret=interpret)
+    from repro.telemetry import gemm_account
     if backend == "reference":
         from repro.kernels import ref
-        out = ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
-                           out_dtype=out_dtype, format_policy=fmt)
+        with gemm_account.suppress():
+            out = ref.mte_gemm(a, b, c=c, bias=bias, epilogue=epilogue,
+                               out_dtype=out_dtype, format_policy=fmt)
     else:
         # XLA path: one dot at the policy's accumulator width + jnp
         # epilogue; XLA fuses the epilogue into the GEMM consumer on TPU,
         # matching MTE's in-register vector-mode post-ops.
-        acc = formats.xla_gemm(a, b, fmt)
+        with gemm_account.suppress():
+            acc = formats.xla_gemm(a, b, fmt)
         out = epilogue.apply(acc.astype(jnp.float32)
                              if fmt.quantized else acc, c_in=c, bias=bias)
         out = out.astype(out_dtype)
@@ -170,5 +173,11 @@ def mte_gemm(a, b, c=None, bias=None, *,
     if sink is not None:
         sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
                          fmt=fmt.name, policy=policy, out_dtype=out_dtype,
+                         backend=backend)
+    acct = gemm_account.active()
+    if acct is not None:
+        # XLA/reference execute one fused dot without consulting the
+        # planner, so the account carries no plan grant for them.
+        acct.record_gemm(m, n, k, fmt=fmt.name, policy=policy,
                          backend=backend)
     return out

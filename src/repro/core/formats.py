@@ -220,6 +220,14 @@ def xla_gemm(a, b, fmt: FormatPolicy):
     ``fmt.accum_dtype`` otherwise — so the caller applies its epilogue at
     accumulator precision and casts last, exactly like the kernels.
     """
+    from repro.telemetry import gemm_account
+    acct = gemm_account.active_unsuppressed()
+    if acct is not None:
+        # Eager xla-backend model layers dispatch here directly without
+        # consulting the planner; seams that record themselves suppress
+        # this fallback hook (see gemm_account.suppress).
+        acct.record_gemm(a.shape[0], b.shape[1], a.shape[1], fmt=fmt.name,
+                         policy="xla", backend="xla")
     if fmt.quantized:
         aq, bq, sa, sb = quantize_operands(a, b, fmt)
         acc = jnp.dot(aq, bq, preferred_element_type=jnp.int32)
@@ -231,6 +239,12 @@ def xla_gemm(a, b, fmt: FormatPolicy):
 
 def xla_grouped(x, w, fmt: FormatPolicy):
     """Grouped ``(G,C,K) @ (G,K,N)`` under the policy, in plain jnp."""
+    from repro.telemetry import gemm_account
+    acct = gemm_account.active_unsuppressed()
+    if acct is not None:
+        acct.record_grouped(w.shape[-3], x.shape[-2], w.shape[-1],
+                            x.shape[-1], fmt=fmt.name, policy="xla",
+                            backend="xla")
     if fmt.quantized:
         xq, wq, sx, sw = quantize_operands(x, w, fmt)
         acc = jnp.einsum("gck,gkn->gcn", xq, wq,

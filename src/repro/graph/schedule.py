@@ -263,15 +263,20 @@ class CompiledProgram:
         out_dtype = jnp.dtype(node.out_dtype)
         if self.backend == "pallas":
             from repro.kernels import ops
+            # ops.mte_gemm feeds the per-GEMM accountant itself.
             return ops.mte_gemm(
                 a, b, c=c, bias=bias, epilogue=node.epilogue,
                 policy=node.policy, out_dtype=out_dtype, format_policy=fmt,
                 interpret=self.interpret,
                 geometry=plan.geometry if plan is not None else None)
-        acc = formats_lib.xla_gemm(a, b, fmt)
+        from repro.telemetry import gemm_account
+        with gemm_account.suppress():
+            acc = formats_lib.xla_gemm(a, b, fmt)
         out = node.epilogue.apply(acc.astype(jnp.float32)
                                   if fmt.quantized else acc,
                                   c_in=c, bias=bias)
+        _account_node(a.shape[0], b.shape[1], a.shape[1], fmt=node.fmt,
+                      policy=node.policy, backend=self.backend, plan=plan)
         return out.astype(out_dtype)
 
     def _run_group(self, node: GroupNode, env, plan):
@@ -293,9 +298,17 @@ class CompiledProgram:
             # epilogue vjps there: exactly the straight-through contract
             # of kernels/autodiff.py, for every format.
             ws = tuple(env[w] for w in node.weights)
-            members = _group_member_gemm(x, ws, biases, node.widths,
-                                         node.fmt, node.epilogues, geom,
-                                         self.interpret)
+            from repro.telemetry import gemm_account
+            # ops.grouped_gemm inside would self-record this same launch
+            # without the program's plan provenance — _account_node below
+            # is the one record for it.
+            with gemm_account.suppress():
+                members = _group_member_gemm(x, ws, biases, node.widths,
+                                             node.fmt, node.epilogues,
+                                             geom, self.interpret)
+            _account_node(x.shape[-2], max(node.widths), x.shape[-1],
+                          fmt=node.fmt, policy="mte", backend=self.backend,
+                          plan=plan, group=node.group)
             return [y.astype(out_dtype) for y in members]
         if node.stacked is not None:
             wstack = env[node.stacked]
@@ -303,6 +316,13 @@ class CompiledProgram:
             wstack = stack_group_weights([env[w] for w in node.weights])
         members = _grouped_launch(x, wstack, node.widths, fmt, kernel_dt,
                                   geom, self.backend, self.interpret)
+        if self.backend != "pallas":
+            # The pallas branch records inside ops.grouped_gemm; the XLA
+            # stacked launch is the one grouped dispatch seam ops never
+            # sees.
+            _account_node(x.shape[-2], wstack.shape[-1], x.shape[-1],
+                          fmt=node.fmt, policy="mte", backend=self.backend,
+                          plan=plan, group=node.group)
         outs = []
         for i, y in enumerate(members):
             epi = node.epilogues[i]
@@ -312,6 +332,26 @@ class CompiledProgram:
                 y = epi.apply(y, bias=biases[i])
             outs.append(y.astype(out_dtype))
         return outs
+
+
+def _account_node(m, n, k, *, fmt, policy, backend, plan, group=1):
+    """Report one compiled-program node execution to the active per-GEMM
+    accountant (repro.telemetry).  A pinned program plan carries its own
+    provenance and modeled time; without one the accountant joins
+    against the planner's ``note_plan`` stream (or ``unplanned``)."""
+    from repro.telemetry import gemm_account
+    acct = gemm_account.active()
+    if acct is None:
+        return
+    source = "program" if plan is not None else None
+    modeled = plan.predicted_s if plan is not None else None
+    if group > 1:
+        acct.record_grouped(group, m, n, k, fmt=fmt, policy=policy,
+                            backend=backend, plan_source=source,
+                            modeled_s=modeled)
+    else:
+        acct.record_gemm(m, n, k, fmt=fmt, policy=policy, backend=backend,
+                         plan_source=source, modeled_s=modeled)
 
 
 def _grouped_launch(x, wstack, widths, fmt, kernel_dt, geom, backend,
@@ -327,7 +367,9 @@ def _grouped_launch(x, wstack, widths, fmt, kernel_dt, geom, backend,
                                out_dtype=kernel_dt, format_policy=fmt,
                                interpret=interpret, geometry=geom)
     else:
-        acc = formats_lib.xla_grouped(x, wstack, fmt)
+        from repro.telemetry import gemm_account
+        with gemm_account.suppress():  # _run_group records this launch
+            acc = formats_lib.xla_grouped(x, wstack, fmt)
         out = (acc.astype(jnp.float32) if fmt.quantized else acc
                ).astype(kernel_dt)
     return [out[i, :, :w] for i, w in enumerate(widths)]

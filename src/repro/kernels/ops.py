@@ -42,6 +42,13 @@ def _trace_sink():
     return trace.active()
 
 
+def _account():
+    """The active repro.telemetry GEMM accountant (None = no accounting,
+    or a higher seam recording this launch itself suppressed us)."""
+    from repro.telemetry import gemm_account
+    return gemm_account.active_unsuppressed()
+
+
 def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
              policy: str = "mte", out_dtype=jnp.float32,
              format_policy=None, interpret: Optional[bool] = None,
@@ -84,6 +91,10 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
             sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
                              fmt=fmt.name, policy=policy,
                              out_dtype=out_dtype, backend="pallas")
+        acct = _account()
+        if acct is not None:
+            acct.record_gemm(a.shape[0], b.shape[1], a.shape[1],
+                             fmt=fmt.name, policy=policy, backend="pallas")
         return out
     m, k = a.shape
     n = b.shape[1]
@@ -96,6 +107,10 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
     if sink is not None:
         sink.record_gemm(a, b, out, c=c, bias=bias, epilogue=epilogue,
                          fmt=fmt.name, policy=policy, out_dtype=out_dtype,
+                         backend="pallas")
+    acct = _account()
+    if acct is not None:
+        acct.record_gemm(m, n, k, fmt=fmt.name, policy=policy,
                          backend="pallas")
     return out
 
@@ -116,6 +131,11 @@ def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
     if sink is not None:
         sink.record_grouped(x, w, out, epilogue=epilogue, fmt=fmt.name,
                             out_dtype=out_dtype, backend="pallas")
+    acct = _account()
+    if acct is not None:
+        acct.record_grouped(w.shape[-3], x.shape[-2], w.shape[-1],
+                            x.shape[-1], fmt=fmt.name, policy="mte",
+                            backend="pallas")
     return out
 
 

@@ -32,8 +32,10 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
         b = b.T
     if format_policy is not None:
         from repro.core import formats
+        from repro.telemetry import gemm_account
         fmt = formats.resolve_format(format_policy, a.dtype)
-        acc = formats.xla_gemm(a, b, fmt)
+        with gemm_account.suppress():  # oracle math, not a dispatch
+            acc = formats.xla_gemm(a, b, fmt)
         out = epilogue.apply(acc.astype(jnp.float32)
                              if fmt.quantized else acc, c_in=c, bias=bias)
         return out.astype(out_dtype)
@@ -52,8 +54,10 @@ def grouped_gemm(x, w, *, epilogue: Epilogue = Epilogue(),
     """
     if format_policy is not None:
         from repro.core import formats
+        from repro.telemetry import gemm_account
         fmt = formats.resolve_format(format_policy, x.dtype)
-        acc = formats.xla_grouped(x, w, fmt)
+        with gemm_account.suppress():  # oracle math, not a dispatch
+            acc = formats.xla_grouped(x, w, fmt)
         out = epilogue.apply(acc.astype(jnp.float32)
                              if fmt.quantized else acc)
         return out.astype(out_dtype)

@@ -114,6 +114,14 @@ def main():
                     help="eager per-GEMM dispatch instead of compiled "
                          "repro.graph programs (debugging escape hatch; "
                          "compiled is the default)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run (engine phase spans + request lifecycle + "
+                         "fault instants; open in ui.perfetto.dev)")
+    ap.add_argument("--gemm-table", action="store_true",
+                    help="print the per-GEMM dispatch table (shape class "
+                         "x format, plan provenance, modeled time) after "
+                         "the run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,6 +136,18 @@ def main():
         draft_cfg = get_config(args.draft_config)
         if args.reduced:
             draft_cfg = draft_cfg.reduced()
+
+    # Telemetry goes up BEFORE the engine: construction compiles the
+    # decode/verify programs, whose GEMM dispatches the accountant must
+    # see (accounting fires at trace time, not per executed step).
+    from repro.telemetry import gemm_account, tracing
+    from repro.telemetry.registry import registry as metrics_registry
+    tracer = None
+    if args.trace:
+        tracer = tracing.Tracer()
+        tracing.install(tracer)
+    acct = gemm_account.GemmAccountant()
+    gemm_account.install(acct)
 
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
@@ -206,6 +226,26 @@ def main():
         r = outputs[rid]
         tag = "" if r.ok else f" [{r.status}]"
         print(f"  req {rid}{tag}: {list(r)[:12]}...")
+    reg = metrics_registry()
+    ttft = reg.get("serving.ttft_s")
+    itl = reg.get("serving.inter_token_s")
+    wait = reg.get("serving.queue_wait_s")
+    if ttft is not None and ttft.count:
+        print(f"  latency: ttft p50 {ttft.percentile(50) * 1e3:.1f}ms / "
+              f"p99 {ttft.percentile(99) * 1e3:.1f}ms"
+              + (f", inter-token p50 {itl.percentile(50) * 1e3:.2f}ms / "
+                 f"p99 {itl.percentile(99) * 1e3:.2f}ms"
+                 if itl is not None and itl.count else "")
+              + (f", queue wait p50 {wait.percentile(50) * 1e3:.2f}ms"
+                 if wait is not None and wait.count else ""))
+    if args.gemm_table:
+        print(acct.format_table())
+    if tracer is not None:
+        tracing.uninstall()
+        tracer.export(args.trace)
+        print(f"wrote trace -> {args.trace} "
+              f"({len(tracer.events)} events)")
+    gemm_account.uninstall()
     if args.plan_cache:
         engine.save_plan_cache()
         print(f"saved plan cache -> {args.plan_cache}")

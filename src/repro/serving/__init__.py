@@ -102,6 +102,40 @@ contract :mod:`repro.serving.resilience` implements:
   flag runs it after every step, and the seeded
   :class:`~repro.serving.resilience.FaultInjector` makes chaos tests
   deterministic (same plan → same firings → same outputs).
+
+Telemetry
+---------
+
+The stack is instrumented through :mod:`repro.telemetry`; observation
+never changes behavior (greedy outputs are bit-identical with telemetry
+on or off, test-asserted):
+
+- **metrics** land in the process-global registry under dotted
+  ``subsystem.metric[_unit]`` names: ``serving.ttft_s`` /
+  ``serving.inter_token_s`` / ``serving.queue_wait_s`` /
+  ``serving.e2e_s`` histograms observed at host sync points only (a
+  clock read never sits inside jitted code), every ``metrics()`` number
+  mirrored as a ``serving.*`` gauge via ``telemetry.registry.publish``,
+  and the planner/compiler hit rates (``plan_cache_hits``,
+  ``graph_program_hits``, …) surfaced alongside.  Each finished or
+  cancelled request carries its own latency summary in
+  ``Response.metrics`` (``ttft_s``, ``itl_p50_s``, ``queue_wait_s``,
+  ``e2e_s``, …).
+- **spans**: wrap a new engine-loop phase with
+  ``with tracing.current().span("phase"):`` — when no tracer is
+  installed this is the allocation-free no-op singleton, so
+  instrumentation costs nothing; never place a span inside a jitted
+  function (it would time jax tracing, not execution).  Request
+  lifecycle instants flow through the scheduler's ``_note_event`` choke
+  point; fault firings emit ``fault.*`` instants.
+  ``launch/serve.py --trace PATH`` exports Chrome/Perfetto
+  ``trace_event`` JSON (open in ``ui.perfetto.dev``); the trace file is
+  ``{"traceEvents": [...], "displayTimeUnit": "ms"}`` with phase-``X``
+  complete events (integer-µs ``ts``/``dur``) and phase-``i`` instants.
+- **per-GEMM accounting**: ``telemetry.gemm_account.account_gemms()``
+  (or ``serve.py --gemm-table``) records every distinct compiled GEMM
+  dispatch with its shape class, format and plan provenance — the
+  paper's Fig. 7 traffic axis, live.
 """
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import AuditError, KVPagePool

@@ -106,6 +106,8 @@ from repro.serving.resilience import (CapacityExceeded, DeadlineExceeded,
                                       FaultInjector, PoisonedOutput,
                                       RequestError, Response, Shed)
 from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.telemetry import tracing
+from repro.telemetry.registry import registry as metrics_registry
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -361,6 +363,17 @@ class ServingEngine:
         self.step_idx = 0
         self._deadline_at: Dict[int, float] = {}   # rid -> absolute deadline
         self._responses: Dict[int, Response] = {}  # rid -> finished Response
+
+        # -- telemetry (repro.telemetry): per-request latency bookkeeping.
+        # Timestamps are host-clock reads at sync points only (the token
+        # is already host-visible when they fire); they feed the global
+        # serving.{ttft,inter_token,queue_wait,e2e}_s histograms and the
+        # per-request summary attached to Response.metrics.
+        self._ts_submit: Dict[int, float] = {}
+        self._ts_first: Dict[int, float] = {}
+        self._ts_last: Dict[int, float] = {}
+        self._queue_wait: Dict[int, float] = {}
+        self._itl: Dict[int, List[float]] = {}
         self.watchdog_s = watchdog_s
         self._watchdog = None
         if watchdog_s:
@@ -404,7 +417,11 @@ class ServingEngine:
             self.sched.shed_requests += 1
             self._responses[req.rid] = Response(
                 (), rid=req.rid, status=err.code, error=err)
+            tr = tracing.active()
+            if tr is not None:
+                tr.instant("request.shed", args={"rid": req.rid})
             raise err
+        self._ts_submit[req.rid] = self._clock()
         self.sched.submit(req)
         dl = req.deadline_ms if req.deadline_ms is not None \
             else self.deadline_ms
@@ -450,7 +467,8 @@ class ServingEngine:
         ``"incomplete"`` for requests still live at the step budget)."""
         for _ in range(max_steps):
             self._enforce_deadlines()
-            self._admit()
+            with tracing.current().span("admit"):
+                self._admit()
             if not any(r is not None for r in self.slot_req):
                 if not self.sched.waiting:
                     break
@@ -461,7 +479,7 @@ class ServingEngine:
                     head = self.sched._pick_admit()
                     self._cancel_waiting(head, CapacityExceeded(
                         f"request rid={head.rid} can never be admitted: "
-                        f"pool={self.sched.pool.describe()}, "
+                        f"pool={self.sched.pool.describe_str()}, "
                         f"token_budget={self.sched.token_budget}",
                         rid=head.rid))
                 continue
@@ -505,6 +523,18 @@ class ServingEngine:
             steps = sum(self.spec_k_hist.values())
             m["spec_k_mean"] = (sum(k * n for k, n
                                     in self.spec_k_hist.items()) / steps)
+        # Planner/compiler caches: hidden hit rates that explain whether
+        # the serving hot path ever re-enters the solver.
+        from repro.core import autotune
+        from repro.graph import schedule as graph_schedule
+        cs = autotune.cache_stats()
+        m.update(plan_cache_hits=cs.hits, plan_cache_misses=cs.misses,
+                 plan_solver_calls=cs.solver_calls)
+        ps = graph_schedule.program_stats()
+        m.update(graph_programs_compiled=ps.get("compiles", 0),
+                 graph_program_hits=ps.get("hits", 0))
+        from repro.telemetry.registry import publish
+        publish("serving", m)
         return m
 
     # -- scheduler ------------------------------------------------------------
@@ -551,6 +581,14 @@ class ServingEngine:
                 return
             slot, entry, cached_tok = got
             req = entry.req
+            sub = self._ts_submit.get(req.rid)
+            if sub is not None and req.rid not in self._queue_wait:
+                # First admission only: a preempted request re-admits,
+                # but its queue wait is the original submit -> admit gap.
+                wait = self._clock() - sub
+                self._queue_wait[req.rid] = wait
+                metrics_registry().histogram(
+                    "serving.queue_wait_s").observe(wait)
             self.slot_req[slot] = req
             self.slot_pos[slot] = 0
             window = (entry.window if entry.window is not None
@@ -602,13 +640,14 @@ class ServingEngine:
         # pages obtainable WITHOUT eviction — a full pool degrades the
         # step to k=1 (vanilla decode) instead of preempting anyone.
         k_step = self._spec_depth(decoding) if decoding else 1
-        for slot in decoding:
-            if self.slot_req[slot] is None or slot in self._prefilling:
-                continue
-            evicted = self.sched.ensure_decode(
-                slot, int(self.slot_pos[slot]) + k_step)
-            for vslot, _ventry in evicted:
-                self._clear_slot(vslot)
+        with tracing.current().span("evict"):
+            for slot in decoding:
+                if self.slot_req[slot] is None or slot in self._prefilling:
+                    continue
+                evicted = self.sched.ensure_decode(
+                    slot, int(self.slot_pos[slot]) + k_step)
+                for vslot, _ventry in evicted:
+                    self._clear_slot(vslot)
         decoding = [s for s in decoding if self.slot_req[s] is not None
                     and s not in self._prefilling]
         if not decoding:
@@ -641,9 +680,11 @@ class ServingEngine:
             rv = np.zeros(self.slots, bool)
             rv[decoding] = True
             batch["row_valid"] = jnp.asarray(rv)
-        logits, self.cache = self._decode(self.params, batch, self.cache)
-        self.sched.note_step(len(decoding))
-        logits = np.array(jnp.asarray(logits, jnp.float32))
+        with tracing.current().span("decode"):
+            logits, self.cache = self._decode(self.params, batch,
+                                              self.cache)
+            self.sched.note_step(len(decoding))
+            logits = np.array(jnp.asarray(logits, jnp.float32))
         if self.fault is not None:
             for slot in decoding:
                 val = self.fault.poison_value(self.step_idx,
@@ -661,21 +702,24 @@ class ServingEngine:
                         f"non-finite logits for rid={req.rid} at step "
                         f"{self.step_idx}", rid=req.rid))
             decoding = healthy
-        for slot in decoding:
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            tok = int(self._sample(logits[slot: slot + 1], req)[0])
-            req.output.append(tok)
-            self.slot_pos[slot] += 1
-            done = self._finished(slot)
-            # Capacity guard: a sequence at the page-table horizon must
-            # finish now — there is no logical page for the next token.
-            if not done and int(self.slot_pos[slot]) >= self.cache_len:
-                self._record_done(req)
-                self.slot_req[slot] = None
-                self.slot_pos[slot] = 0
-                self.sched.release(slot, finished=True)
+        with tracing.current().span("sample"):
+            for slot in decoding:
+                req = self.slot_req[slot]
+                if req is None:
+                    continue
+                tok = int(self._sample(logits[slot: slot + 1], req)[0])
+                req.output.append(tok)
+                self._note_emitted(req, 1)
+                self.slot_pos[slot] += 1
+                done = self._finished(slot)
+                # Capacity guard: a sequence at the page-table horizon
+                # must finish now — there is no logical page for the
+                # next token.
+                if not done and int(self.slot_pos[slot]) >= self.cache_len:
+                    self._record_done(req)
+                    self.slot_req[slot] = None
+                    self.slot_pos[slot] = 0
+                    self.sched.release(slot, finished=True)
         if self.debug_audit:
             self.sched.pool.audit()
 
@@ -695,7 +739,8 @@ class ServingEngine:
             slot = min(self._prefilling,
                        key=lambda s: self.sched.active[s].arrival)
             try:
-                self._advance_prefill(slot)
+                with tracing.current().span("prefill_chunk"):
+                    self._advance_prefill(slot)
             except RequestError as e:
                 # Chunk-compute failure: contained to this request — its
                 # slot and pages free, every other request unaffected.
@@ -743,6 +788,7 @@ class ServingEngine:
                     f"{self.step_idx}", rid=req.rid)
             tok = int(self._sample(logits, req)[0])
             req.output.append(tok)
+            self._note_emitted(req, 1)
             self.slot_pos[slot] = self.prefill_len
             self._finished(slot)
 
@@ -973,7 +1019,8 @@ class ServingEngine:
 
     def _spec_step(self, decoding, k):
         """One draft-and-verify decode step over the decoding slots."""
-        proposals, dlogits, draft_snap = self._draft_propose(decoding, k)
+        with tracing.current().span("draft"):
+            proposals, dlogits, draft_snap = self._draft_propose(decoding, k)
         target_snap = self.cache
         tokens = np.zeros((self.slots, k), np.int32)
         pos = np.zeros(self.slots, np.int32)
@@ -991,8 +1038,9 @@ class ServingEngine:
                  "page_table": jnp.asarray(table)}
         if self._stateful_rows:
             batch["row_valid"] = jnp.asarray(rv)
-        logits, self.cache = self._verify(self.params, batch, self.cache)
-        logits = np.array(jnp.asarray(logits, jnp.float32))  # (slots, k, V)
+        with tracing.current().span("verify"):
+            logits, self.cache = self._verify(self.params, batch, self.cache)
+            logits = np.array(jnp.asarray(logits, jnp.float32))  # (slots,k,V)
         self.spec_k_hist[k] = self.spec_k_hist.get(k, 0) + 1
         if self.fault is not None:
             for s in decoding:
@@ -1014,6 +1062,8 @@ class ServingEngine:
         drafted = accepted = emitted = 0
         partial: Dict[int, int] = {}      # slot -> accepted-prefix length
         draft_rollback: List[int] = []
+        sample_span = tracing.current().span("sample")
+        sample_span.__enter__()
         for s in decoding:
             req = self.slot_req[s]
             if req is None:
@@ -1021,14 +1071,22 @@ class ServingEngine:
             emit, j = self._accept(logits[s], proposals[s], dlogits[s], req)
             drafted += k - 1
             accepted += j
-            done = False
+            n_emit = 0
             for t in emit:
                 req.output.append(int(t))
                 self.slot_pos[s] += 1
                 emitted += 1
-                if self._finished(s):
-                    done = True
+                n_emit += 1
+                # Same predicate _finished() applies below — checked
+                # inline so the latency note lands BEFORE _record_done
+                # pops this request's timing state.
+                if (len(req.output) >= req.max_tokens
+                        or (req.eos_id is not None
+                            and int(t) == req.eos_id)):
                     break
+            if n_emit:
+                self._note_emitted(req, n_emit)
+            done = self._finished(s)
             if not done and int(self.slot_pos[s]) >= self.cache_len:
                 self._record_done(req)
                 self.slot_req[s] = None
@@ -1050,6 +1108,7 @@ class ServingEngine:
                 # replay of the j+1 real tokens [e, d_1..d_j].
                 partial[s] = j + 1
                 draft_rollback.append(s)
+        sample_span.__exit__(None, None, None)
         if draft_rollback and self._draft_stateful:
             self.draft_cache = self._merge_rows(self.draft_cache,
                                                 draft_snap, draft_rollback)
@@ -1159,6 +1218,63 @@ class ServingEngine:
         self._spec_program = graph_schedule.compile_cached(
             key, build, backend=cfg.gemm_backend)
 
+    # -- telemetry: per-request latency ----------------------------------------
+    def _note_emitted(self, req: Request, n_new: int):
+        """Latency bookkeeping at a host sync point: ``n_new`` tokens of
+        ``req`` just became host-visible.  The first emission closes the
+        TTFT window; later ones feed the inter-token histogram (a
+        speculative step emitting n tokens contributes n samples of the
+        per-token share of its step gap)."""
+        if n_new <= 0:
+            return
+        rid = req.rid
+        now = self._clock()
+        reg = metrics_registry()
+        if rid not in self._ts_first:
+            self._ts_first[rid] = now
+            sub = self._ts_submit.get(rid)
+            if sub is not None:
+                reg.histogram("serving.ttft_s").observe(now - sub)
+            tr = tracing.active()
+            if tr is not None:
+                tr.instant("request.first_token", args={"rid": rid})
+            n_new -= 1   # the first token closes TTFT, not an ITL gap
+        last = self._ts_last.get(rid)
+        if last is not None and n_new > 0:
+            gap = (now - last) / n_new
+            hist = reg.histogram("serving.inter_token_s")
+            samples = self._itl.setdefault(rid, [])
+            for _ in range(n_new):
+                hist.observe(gap)
+                samples.append(gap)
+        self._ts_last[rid] = now
+
+    def _request_metrics(self, rid: int, n_tokens: int) -> Dict[str, float]:
+        """The latency summary attached to ``Response.metrics`` when a
+        request ends (finish or cancel); pops the per-rid state."""
+        m: Dict[str, float] = {"tokens": n_tokens}
+        now = self._clock()
+        sub = self._ts_submit.pop(rid, None)
+        first = self._ts_first.pop(rid, None)
+        self._ts_last.pop(rid, None)
+        wait = self._queue_wait.pop(rid, None)
+        itl = self._itl.pop(rid, None)
+        if sub is not None:
+            m["e2e_s"] = now - sub
+            metrics_registry().histogram("serving.e2e_s").observe(
+                m["e2e_s"])
+        if wait is not None:
+            m["queue_wait_s"] = wait
+        if sub is not None and first is not None:
+            m["ttft_s"] = first - sub
+        if itl:
+            itl = sorted(itl)
+            m["itl_mean_s"] = sum(itl) / len(itl)
+            m["itl_p50_s"] = itl[len(itl) // 2]
+            m["itl_p99_s"] = itl[min(len(itl) - 1,
+                                     int(round(0.99 * (len(itl) - 1))))]
+        return m
+
     # -- request-level containment ---------------------------------------------
     def _record_done(self, req: Request, status: str = "ok",
                      error: Optional[RequestError] = None):
@@ -1166,7 +1282,7 @@ class ServingEngine:
         self.completed.append(req)
         self._responses[req.rid] = Response(
             req.output, rid=req.rid, status=status, error=error,
-            metrics={"tokens": len(req.output)})
+            metrics=self._request_metrics(req.rid, len(req.output)))
 
     def _cancel_active(self, slot: int, err: RequestError):
         """Cancel the request in ``slot``: free the slot and its pages
@@ -1182,7 +1298,7 @@ class ServingEngine:
         self._deadline_at.pop(req.rid, None)
         self._responses[req.rid] = Response(
             req.output, rid=req.rid, status=err.code, error=err,
-            metrics={"tokens": len(req.output)})
+            metrics=self._request_metrics(req.rid, len(req.output)))
 
     def _cancel_waiting(self, entry, err: RequestError):
         """Cancel a request still in the queue (never admitted)."""
@@ -1192,7 +1308,7 @@ class ServingEngine:
         self._deadline_at.pop(req.rid, None)
         self._responses[req.rid] = Response(
             req.output, rid=req.rid, status=err.code, error=err,
-            metrics={"tokens": len(req.output)})
+            metrics=self._request_metrics(req.rid, len(req.output)))
 
     def _enforce_deadlines(self):
         """Cancel every request (active or waiting) whose absolute
@@ -1228,6 +1344,10 @@ class ServingEngine:
         registrations, finished responses, and the engine geometry.
         Pure metadata — no device arrays; pair it with ``self.cache`` if
         the restore should re-attach the surviving KV."""
+        with tracing.current().span("snapshot"):
+            return self._snapshot()
+
+    def _snapshot(self) -> Dict[str, object]:
         now = self._clock()
         entries = sorted(
             list(self.sched.active.values()) + list(self.sched.waiting),
@@ -1270,6 +1390,10 @@ class ServingEngine:
         pool first, so re-admission aliases the published KV through the
         prefix cache instead of recomputing it.
         """
+        with tracing.current().span("restore"):
+            return self._restore(snap, cache=cache)
+
+    def _restore(self, snap: Dict[str, object], *, cache=None):
         geo = snap.get("geometry")
         if geo != self._geometry():
             raise ValueError(f"snapshot geometry {geo} does not match "

@@ -342,7 +342,8 @@ class KVPagePool:
           6. the null page 0 appears nowhere.
         """
         def fail(msg: str):
-            raise AuditError(f"KVPagePool.audit: {msg} [{self.describe()}]")
+            raise AuditError(
+                f"KVPagePool.audit: {msg} [{self.describe_str()}]")
 
         free = list(self._free)
         cached = list(self._cached_free)
@@ -475,11 +476,27 @@ class KVPagePool:
             row[: len(pages)] = pages[:max_pages]
         return row
 
-    def describe(self) -> str:
-        return (f"KVPagePool({self.num_pages} pages x {self.page_size} "
-                f"tokens, {self.free_pages} free, "
-                f"{len(self._owned)} sequences, "
-                f"{self.shared_pages} shared, {self.cached_pages} cached, "
-                f"{self.prefix_hit_pages} prefix hits / "
-                f"{self.prefix_queries} queries, "
-                f"{self.cow_copies} cow copies)")
+    def describe(self) -> Dict[str, int]:
+        """Structured pool state — one dict that audits, telemetry and
+        ``ServingEngine.metrics()`` all consume (``describe_str()`` is
+        the human-readable rendering of the same fields)."""
+        return {"num_pages": self.num_pages,
+                "page_size": self.page_size,
+                "free_pages": self.free_pages,
+                "used_pages": self.used_pages,
+                "sequences": len(self._owned),
+                "shared_pages": self.shared_pages,
+                "cached_pages": self.cached_pages,
+                "prefix_hit_pages": self.prefix_hit_pages,
+                "prefix_queries": self.prefix_queries,
+                "cow_copies": self.cow_copies}
+
+    def describe_str(self) -> str:
+        d = self.describe()
+        return (f"KVPagePool({d['num_pages']} pages x {d['page_size']} "
+                f"tokens, {d['free_pages']} free, "
+                f"{d['sequences']} sequences, "
+                f"{d['shared_pages']} shared, {d['cached_pages']} cached, "
+                f"{d['prefix_hit_pages']} prefix hits / "
+                f"{d['prefix_queries']} queries, "
+                f"{d['cow_copies']} cow copies)")

@@ -230,7 +230,16 @@ class FaultInjector:
         if self._remaining[i] <= 0:
             return False
         self._remaining[i] -= 1
-        self.fired.append((int(step), self.faults[i].kind, target))
+        kind = self.faults[i].kind
+        self.fired.append((int(step), kind, target))
+        # Mark the firing on the installed trace (repro.telemetry) so a
+        # chaos run replays as a timeline: the fault instant sits between
+        # the engine-phase spans it perturbed.
+        from repro.telemetry import tracing
+        tr = tracing.active()
+        if tr is not None:
+            tr.instant(f"fault.{kind}",
+                       args={"step": int(step), "target": repr(target)})
         return True
 
     def _matches(self, f: Fault, *, step: int, rid: Optional[int] = None,

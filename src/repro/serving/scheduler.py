@@ -125,11 +125,23 @@ class ContinuousBatchingScheduler:
         self.spec_emitted = 0         # tokens emitted by spec steps
         #                               (accepted + resample/bonus)
 
+    def _note_event(self, kind: str, rid: int) -> None:
+        """Append to the in-order lifecycle log AND mark the installed
+        trace (repro.telemetry) — this is the single choke point every
+        request lifecycle transition passes through, so the exported
+        timeline carries submit → admit → preempt → finish/cancel for
+        every request with no engine cooperation needed."""
+        self.events.append((kind, rid))
+        from repro.telemetry import tracing
+        tr = tracing.active()
+        if tr is not None:
+            tr.instant(f"request.{kind}", args={"rid": rid})
+
     # -- queue -----------------------------------------------------------------
     def submit(self, req) -> ScheduledRequest:
         entry = ScheduledRequest(req=req, arrival=next(self._arrival))
         self.waiting.append(entry)
-        self.events.append(("submit", entry.rid))
+        self._note_event("submit", entry.rid)
         return entry
 
     def requeue(self, entry: ScheduledRequest) -> None:
@@ -142,7 +154,7 @@ class ContinuousBatchingScheduler:
         entry.window = None
         self.preemptions += 1
         self.waiting.append(entry)
-        self.events.append(("preempt", entry.rid))
+        self._note_event("preempt", entry.rid)
 
     @property
     def has_work(self) -> bool:
@@ -276,7 +288,7 @@ class ContinuousBatchingScheduler:
         cached_tok = keep_pages * self.page_size
         self.prefill_tokens += prefill_len - cached_tok
         self.cached_prefill_tokens += cached_tok
-        self.events.append(("admit", head.rid))
+        self._note_event("admit", head.rid)
         return slot, head, cached_tok
 
     def register_prefix(self, slot: int, index: int, page_hash: str) -> bool:
@@ -327,7 +339,7 @@ class ContinuousBatchingScheduler:
         self.pool.release(entry.arrival)
         if finished:
             self.completed_requests += 1
-            self.events.append(("finish", entry.rid))
+            self._note_event("finish", entry.rid)
 
     # -- request-level containment ---------------------------------------------
     def cancel(self, slot: int) -> ScheduledRequest:
@@ -337,7 +349,7 @@ class ContinuousBatchingScheduler:
         entry = self.active.pop(slot)
         self.pool.release(entry.arrival)
         self.cancelled_requests += 1
-        self.events.append(("cancel", entry.rid))
+        self._note_event("cancel", entry.rid)
         return entry
 
     def cancel_waiting(self, entry: ScheduledRequest) -> None:
@@ -345,7 +357,7 @@ class ContinuousBatchingScheduler:
         head can never fit): it leaves the line without being admitted."""
         self.waiting.remove(entry)
         self.cancelled_requests += 1
-        self.events.append(("cancel", entry.rid))
+        self._note_event("cancel", entry.rid)
 
     # -- device-side view / metrics --------------------------------------------
     def table_row(self, slot: int):

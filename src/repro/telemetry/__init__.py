@@ -1,0 +1,46 @@
+"""repro.telemetry — the instrumentation floor of the serving stack.
+
+Three stdlib-only modules (no jax imports — telemetry must be loadable
+from any layer without cycles, and must never put wall-clock reads
+inside jitted code; timestamps are taken only at host sync points):
+
+- :mod:`repro.telemetry.registry` — a process-global metrics registry of
+  counters, gauges and fixed-bucket histograms.  **Naming a metric**:
+  dotted lowercase ``subsystem.metric[_unit]`` — ``serving.ttft_s``,
+  ``serving.decode_tokens``, ``autotune.plan_cache_hits``.  The unit
+  suffix (``_s``, ``_ms``, ``_pages``, ``_tokens``) is part of the name;
+  the registry never rescales.  ``registry()`` returns the global
+  instance; ``publish(prefix, mapping)`` mirrors an ad-hoc metrics dict
+  into gauges so legacy ``metrics()`` surfaces and the registry agree.
+- :mod:`repro.telemetry.tracing` — a span tracer with a **zero-overhead
+  no-op default**: ``tracing.current()`` returns a process-wide
+  singleton whose ``span()`` returns one reusable no-op context manager
+  (no per-call allocation), so hot loops may be instrumented
+  unconditionally.  **Adding a span**: ``with tracing.current().span(
+  "phase_name"):`` around the host-side section — never inside a jitted
+  function (the span would measure trace time, not run time).  Install a
+  real :class:`~repro.telemetry.tracing.Tracer` to collect; ``export()``
+  writes **Chrome/Perfetto trace-event JSON**: ``{"traceEvents": [...],
+  "displayTimeUnit": "ms"}``, spans as phase-``X`` complete events
+  (``ts``/``dur`` in microseconds), lifecycle/fault marks as
+  phase-``i`` instants — load the file directly in ``ui.perfetto.dev``
+  or ``chrome://tracing``.
+- :mod:`repro.telemetry.gemm_account` — per-GEMM dispatch accounting at
+  the same seams ``repro.graph.trace.trace_gemms()`` hooks
+  (``dispatch.mte_gemm``, ``kernels/ops.py``, compiled-program node
+  execution), recording signature, format, the paper's M/N/K shape
+  class (square vs tall/skinny), plan source (cache-hit / solver /
+  pinned-geometry) and modeled time — the Fig. 7 traffic table for a
+  live serving run.  Like ``trace_gemms``, hooks fire at jax *trace*
+  time: counts are distinct compiled dispatches, not executed steps.
+"""
+from repro.telemetry.registry import (Counter, Gauge, Histogram,
+                                      MetricsRegistry, publish, registry,
+                                      reset_registry)
+from repro.telemetry.tracing import Tracer, validate_trace
+from repro.telemetry.gemm_account import (GemmAccountant, GemmRecord,
+                                          account_gemms, shape_class)
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "publish",
+           "registry", "reset_registry", "Tracer", "validate_trace",
+           "GemmAccountant", "GemmRecord", "account_gemms", "shape_class"]
