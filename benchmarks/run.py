@@ -626,6 +626,120 @@ def serving_latency_rows(smoke: bool = True):
     ]
 
 
+def perfmodel_calibration_rows(smoke: bool = True):
+    """Continuous-profiler calibration: dispatch a mixed GEMM workload
+    (planned pallas + planner-bypassing xla, square and tall/skinny)
+    under the accountant, then time the hot signatures at the host sync
+    point and join wall clock against ``perfmodel`` predictions.
+
+    The per-shape-class ``error_ratio`` is measured/modeled — on CI's
+    CPU interpreter it is a large (honest) constant since the model
+    prices a TPU; the guard asserts presence + finiteness, not a value.
+    ``regret_flags`` counts hot signatures whose granted plan measurably
+    lost to its analytic runner-up (the plan-quality audit).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import autotune, dispatch
+    from repro.telemetry import gemm_account
+    from repro.telemetry.profiler import DispatchProfiler
+
+    autotune.reset_cache()
+    rng = np.random.default_rng(0)
+    shapes = [(64, 48, 64), (8, 128, 64), (128, 128, 128)]
+    if not smoke:
+        shapes += [(16, 256, 128), (256, 256, 256)]
+    with gemm_account.account_gemms() as acct:
+        for m, n, k in shapes:
+            a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+            dispatch.mte_gemm(a, b, backend="pallas").block_until_ready()
+            dispatch.mte_gemm(a, b, backend="xla").block_until_ready()
+    prof = DispatchProfiler(acct, iters=1)
+    prof.sample()
+    table = prof.calibration_table()
+    # Collapse (shape_class, fmt, source) rows to per-shape-class ratios.
+    by_class = {}
+    for r in table:
+        if r.sampled:
+            agg = by_class.setdefault(r.shape_class, [0.0, 0.0])
+            agg[0] += r.modeled_s
+            agg[1] += r.measured_s
+    audit = prof.regret_audit(top_k=2)
+    flags = sum(1 for e in audit if e["flagged"])
+    rows = [(f"perfmodel.calibration.{sc}.error_ratio", "",
+             f"{measured / modeled:.2f}")
+            for sc, (modeled, measured) in sorted(by_class.items())
+            if modeled > 0]
+    rows += [
+        ("perfmodel.calibration.signatures", "",
+         f"{len(prof._measured)}"),
+        ("perfmodel.calibration.unmeasurable", "",
+         f"{len(prof._failed)}"),
+        ("perfmodel.calibration.regret_audited", "", f"{len(audit)}"),
+        ("perfmodel.calibration.regret_flags", "", f"{flags}"),
+    ]
+    return rows
+
+
+def serving_slo_rows(smoke: bool = True):
+    """SLO-monitor section: a healthy serving wave with the monitor
+    evaluating the stock objectives (tail TTFT, error rate, KV headroom)
+    after every engine step.  Thresholds are CI-generous — the row under
+    guard is the *mechanism* (objectives evaluated, verdict OK, zero
+    breaches on a healthy run), not machine-dependent latency.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving import Request, ServingEngine
+    from repro.telemetry.registry import registry, reset_registry
+    from repro.telemetry.slo import SloMonitor, default_slos
+
+    cfg = get_config("gemma_2b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                              vocab=128, n_heads=2, n_kv_heads=1,
+                              head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 4 if smoke else 8
+
+    reset_registry()
+    mon = SloMonitor(default_slos(ttft_p99_s=120.0, error_rate=0.5,
+                                  min_free_page_frac=0.0))
+    eng = ServingEngine(params, cfg, slots=2, cache_len=64,
+                        prefill_len=16, page_size=8, slo_monitor=mon)
+    for rid in range(n_req):
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, size=12, dtype=np.int32),
+            max_tokens=6))
+    eng.run()
+    rep = mon.last_report
+    reg = registry()
+    breaches = sum(len(r.breaching) for r in [rep]) if rep else 0
+    viol = reg.get("slo.violations")
+    rows = [
+        ("serving.slo.ok", "", f"{1.0 if rep and rep.ok else 0.0}"),
+        ("serving.slo.objectives", "",
+         f"{len(rep.statuses) if rep else 0}"),
+        ("serving.slo.evaluations", "", f"{mon.evaluations}"),
+        ("serving.slo.violations", "",
+         f"{viol.value if viol is not None else 0.0:.0f}"),
+        ("serving.slo.breaching", "", f"{breaches}"),
+    ]
+    if rep:
+        rows += [(f"serving.slo.{s.name}.ok", "",
+                  f"{1.0 if s.ok else 0.0}") for s in rep.statuses]
+    return rows
+
+
 # -- bench-regression guard ----------------------------------------------------
 
 # (key, minimum, maximum-ratio-vs-baseline, absolute-minimum): only
@@ -657,6 +771,16 @@ REGRESSION_RULES = [
     ("serving.latency.itl_p99_ms",                None, None, 0.0),
     ("serving.latency.queue_wait_p50_ms",         None, None, 0.0),
     ("serving.latency.requests_measured",         None, None, 5.0),
+    # Calibration error ratios are substrate wall-clock over a TPU model
+    # (machine-dependent): the guard pins the mechanism — signatures got
+    # measured, the regret audit ran, SLO verdicts are evaluated and OK
+    # on a healthy run.
+    ("perfmodel.calibration.signatures",          None, None, 1.0),
+    ("perfmodel.calibration.regret_audited",      None, None, 1.0),
+    ("perfmodel.calibration.regret_flags",        None, None, 0.0),
+    ("serving.slo.ok",                            None, None, 1.0),
+    ("serving.slo.objectives",                    None, None, 3.0),
+    ("serving.slo.breaching",                     None, 1.00, 0.0),
 ]
 
 
@@ -827,6 +951,20 @@ def main() -> None:
 
     # -- latency percentiles from the telemetry registry (traced run) ------------
     csv_rows.extend(serving_latency_rows(smoke=args.smoke))
+
+    # -- continuous profiler: modeled-vs-measured calibration + regret audit -----
+    csv_rows.extend(perfmodel_calibration_rows(smoke=args.smoke))
+
+    # -- SLO monitor: declarative objectives evaluated per engine step -----------
+    csv_rows.extend(serving_slo_rows(smoke=args.smoke))
+
+    # Prometheus dump of the last section's registry (the SLO serving
+    # wave: serving.* gauges, kv.* pool gauges, latency histograms,
+    # slo.* verdicts) — CI validates the round-trip and uploads it next
+    # to BENCH_gemm.json / BENCH_trace.json.
+    from repro.telemetry.export import write_prometheus
+    write_prometheus("BENCH_prom.txt")
+    print("wrote BENCH_prom.txt", file=sys.stderr)
 
     # -- roofline (if dry-run artifacts exist) --------------------------------------
     if not args.smoke:

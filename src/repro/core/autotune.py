@@ -538,6 +538,51 @@ class PlanCache:
         while len(self._plans) > self.maxsize:
             self._plans.popitem(last=False)
 
+    # -- plan-quality audit hooks (repro.telemetry.profiler) -----------------
+    def analytic_candidates(self, sig: GemmSignature) -> List[ExecutionPlan]:
+        """The signature's candidate plans in analytic-score order (best
+        first) — the same ranking :meth:`_build` starts from.  The
+        profiler's plan-regret audit times the granted plan against the
+        first entry here that differs from it (the analytic runner-up)."""
+        cands = enumerate_candidates(sig, self.profile, self.n_cores)
+        scored = sorted(
+            ((score_geometry(sig, g, self.profile, self.n_cores), i, g)
+             for i, g in enumerate(cands)),
+            key=lambda t: (t[0], t[1]))
+        return [ExecutionPlan(signature=sig, geometry=g,
+                              route=_route_for(sig, g), predicted_s=s)
+                for s, _, g in scored]
+
+    def runner_up(self, sig: GemmSignature) -> Optional[ExecutionPlan]:
+        """The best analytic candidate that is NOT the granted plan
+        (None when the signature is uncached or has a single candidate)."""
+        granted = self._plans.get(sig)
+        if granted is None:
+            return None
+        for cand in self.analytic_candidates(sig):
+            if (cand.geometry != granted.geometry
+                    or cand.route != granted.route):
+                return cand
+        return None
+
+    def recalibrate(self, sig: GemmSignature, *,
+                    interpret: Optional[bool] = None) -> ExecutionPlan:
+        """Re-grant ``sig`` from measurement, replacing the cached entry.
+
+        The plan-regret audit (:mod:`repro.telemetry.profiler`) calls
+        this when the granted plan measurably loses to its analytic
+        runner-up: the full measured-refinement search of :meth:`_build`
+        (``measure=True`` — top analytic candidates, the analytic base,
+        and the fused-XLA fallback all timed on the current substrate)
+        reruns and the measured winner displaces the stale grant.  The
+        new grant is re-announced to the accountant so later dispatch
+        records join against the refreshed provenance.
+        """
+        plan = self._build(sig, measure=True, interpret=interpret)
+        self._insert(sig, plan)
+        _note_plan(sig, plan.source, plan.predicted_s)
+        return plan
+
     # -- persistence ----------------------------------------------------------
     def to_json(self) -> Dict:
         return {

@@ -66,6 +66,7 @@ from repro.core.epilogue import Epilogue
 from repro.core.geometry import (
     BlockGeometry, Policy, TPU_V5E, TpuProfile, solve_block_geometry,
 )
+from repro.core import perfmodel
 from repro.core.perfmodel import TpuGemmTiming, tpu_gemm_time
 from repro.core.tile_state import SEW
 
@@ -177,7 +178,11 @@ def mte_gemm(a, b, c=None, bias=None, *,
     acct = gemm_account.active()
     if acct is not None:
         # XLA/reference execute one fused dot without consulting the
-        # planner, so the account carries no plan grant for them.
+        # planner, so the account carries no plan grant for them; the
+        # analytic perf model still supplies the modeled time so the
+        # profiler's calibration join covers planner-bypassing traffic.
         acct.record_gemm(m, n, k, fmt=fmt.name, policy=policy,
-                         backend=backend)
+                         backend=backend, plan_source="unplanned",
+                         modeled_s=perfmodel.analytic_seconds(
+                             m, n, k, fmt=fmt.name, policy=policy))
     return out

@@ -46,7 +46,9 @@ from repro.core.geometry import (
 from repro.core.isa import count_instructions
 from repro.core.tile_state import SEW
 
-__all__ = ["GemmTiming", "model_gemm", "model_all", "tpu_gemm_time"]
+__all__ = ["GemmTiming", "model_gemm", "model_all", "tpu_gemm_time",
+           "analytic_seconds", "set_calibration", "clear_calibration",
+           "calibration", "calibrated_seconds"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,3 +282,72 @@ def tpu_gemm_time(geom: BlockGeometry, m: int, n: int, k: int,
     return TpuGemmTiming(geom=geom, m=m, n=n, k=k, compute_s=compute_s,
                          memory_s=memory_s, useful_flops=useful_flops,
                          padded_flops=padded_flops, hbm_bytes=hbm)
+
+
+def analytic_seconds(m: int, n: int, k: int, *, fmt: str = "fp32",
+                     policy: str = "mte", group: int = 1,
+                     profile: TpuProfile = TPU_V5E,
+                     n_cores: int = 1) -> float:
+    """Predicted seconds for a dispatch that never consulted the planner.
+
+    The dispatch seams that bypass the plan cache (the plain-XLA dot in
+    ``dispatch.mte_gemm``, the rigid ``policy='amx'`` baseline in
+    ``kernels/ops.py``) still need a perf-model prediction so the
+    profiler's calibration table can score them — this solves the
+    analytic block geometry for the shape/format and returns its
+    modeled time, the exact number ``PlanCache`` would have predicted
+    for its analytic base candidate.  Grouped dispatches are modeled as
+    ``group`` sequential per-member schedules (the grouped kernel's
+    group grid dimension is already parallelism).
+    """
+    from repro.core.formats import FORMATS
+    from repro.core.geometry import solve_block_geometry
+    fp = FORMATS.get(fmt)
+    sew_i = fp.sew_i if fp is not None else SEW.E32
+    sew_o = fp.sew_o if fp is not None else SEW.E32
+    solver_policy = policy if policy in ("mte", "amx") else "mte"
+    geom = solve_block_geometry(m, n, k, sew_i, sew_o, profile=profile,
+                                policy=solver_policy)
+    t = tpu_gemm_time(geom, m, n, k, profile=profile, n_cores=n_cores)
+    return t.seconds * max(int(group), 1)
+
+
+# ---------------------------------------------------------------------------
+# Measured calibration scales (ROADMAP item 5, the measurement half)
+# ---------------------------------------------------------------------------
+#
+# The analytic model above predicts; the telemetry profiler
+# (repro.telemetry.profiler) measures.  Where they disagree, the profiler
+# can install a per-(shape_class, fmt) measured/modeled ratio here so any
+# consumer that wants substrate-honest predictions multiplies through
+# ``calibrated_seconds``.  Nothing in the planner consumes these yet —
+# plan ranking stays analytic and deterministic; the table is the
+# evidence base the future tile simulator (ROADMAP item 5's remaining
+# half) will be validated against.
+
+_CALIBRATION: Dict[tuple, float] = {}
+
+
+def set_calibration(shape_class: str, fmt: str, ratio: float) -> None:
+    """Record a measured/modeled error ratio for one (shape class, fmt)."""
+    ratio = float(ratio)
+    if not (ratio > 0.0) or ratio != ratio or ratio == float("inf"):
+        raise ValueError(f"calibration ratio must be finite and positive, "
+                         f"got {ratio!r} for ({shape_class}, {fmt})")
+    _CALIBRATION[(str(shape_class), str(fmt))] = ratio
+
+
+def clear_calibration() -> None:
+    _CALIBRATION.clear()
+
+
+def calibration() -> Dict[str, float]:
+    """The installed ratios as ``{"shape_class/fmt": ratio}`` (a copy)."""
+    return {f"{sc}/{fmt}": r for (sc, fmt), r in sorted(_CALIBRATION.items())}
+
+
+def calibrated_seconds(seconds: float, shape_class: str, fmt: str) -> float:
+    """Scale an analytic prediction by the installed measured ratio
+    (identity when no ratio has been installed for the class/format)."""
+    return float(seconds) * _CALIBRATION.get((str(shape_class), str(fmt)),
+                                             1.0)

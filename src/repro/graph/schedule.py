@@ -237,21 +237,36 @@ class CompiledProgram:
         if len(args) != len(g.inputs):
             raise ValueError(f"program takes {len(g.inputs)} inputs, "
                              f"got {len(args)}")
-        env: Dict[int, object] = dict(zip(g.inputs, args))
-        for idx, node in enumerate(g.nodes):
-            if isinstance(node, GemmNode):
-                env[node.out] = self._run_gemm(node, env,
-                                               self.plans.get(idx))
-            elif isinstance(node, GroupNode):
-                for vid, val in zip(node.outputs,
-                                    self._run_group(node, env,
-                                                    self.plans.get(idx))):
-                    env[vid] = val
-            elif isinstance(node, CastNode):
-                env[node.out] = _apply_cast(env[node.x], node.fmt)
-            else:
-                env[node.out] = _run_epilogue(node, env)
-        outs = tuple(env[v] for v in g.outputs)
+        # graph.program span: Perfetto traces attribute step time to the
+        # program, not just the engine phase around it.  Like the
+        # accounting hooks at these same seams, under jit the span fires
+        # at jax trace time (per distinct compiled dispatch); in eager /
+        # interpret execution it brackets the actual node-loop run.
+        from repro.telemetry import tracing
+        tr = tracing.active()
+        span = (tr.span("graph.program", args={
+                    "signature": self.signature,
+                    "nodes": len(g.nodes),
+                    "grouped": sum(1 for n in g.nodes
+                                   if isinstance(n, GroupNode)),
+                    "dispatches": self.n_dispatches})
+                if tr is not None else tracing.NOOP.span("graph.program"))
+        with span:
+            env: Dict[int, object] = dict(zip(g.inputs, args))
+            for idx, node in enumerate(g.nodes):
+                if isinstance(node, GemmNode):
+                    env[node.out] = self._run_gemm(node, env,
+                                                   self.plans.get(idx))
+                elif isinstance(node, GroupNode):
+                    for vid, val in zip(node.outputs,
+                                        self._run_group(node, env,
+                                                        self.plans.get(idx))):
+                        env[vid] = val
+                elif isinstance(node, CastNode):
+                    env[node.out] = _apply_cast(env[node.x], node.fmt)
+                else:
+                    env[node.out] = _run_epilogue(node, env)
+            outs = tuple(env[v] for v in g.outputs)
         return outs[0] if len(outs) == 1 else outs
 
     # -- node execution -------------------------------------------------------

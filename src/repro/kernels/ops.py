@@ -93,8 +93,16 @@ def mte_gemm(a, b, c=None, bias=None, *, epilogue: Epilogue = Epilogue(),
                              out_dtype=out_dtype, backend="pallas")
         acct = _account()
         if acct is not None:
+            # The rigid AMX path never consults the planner (fixed tile
+            # shape); the analytic model still prices it so the
+            # profiler's calibration join covers the baseline too.
+            from repro.core import perfmodel
             acct.record_gemm(a.shape[0], b.shape[1], a.shape[1],
-                             fmt=fmt.name, policy=policy, backend="pallas")
+                             fmt=fmt.name, policy=policy, backend="pallas",
+                             plan_source="unplanned",
+                             modeled_s=perfmodel.analytic_seconds(
+                                 a.shape[0], b.shape[1], a.shape[1],
+                                 fmt=fmt.name, policy=policy))
         return out
     m, k = a.shape
     n = b.shape[1]

@@ -122,7 +122,34 @@ def main():
                     help="print the per-GEMM dispatch table (shape class "
                          "x format, plan provenance, modeled time) after "
                          "the run")
+    ap.add_argument("--status-json", default=None, metavar="PATH",
+                    help="write the structured health() snapshot (registry"
+                         " + KV pool + scheduler + plan-cache/program "
+                         "stats + SLO verdicts + calibration summary) as "
+                         "schema-validated JSON after the run")
+    ap.add_argument("--prom", default=None, metavar="PATH",
+                    help="write the whole metrics registry in Prometheus "
+                         "text exposition format after the run")
+    ap.add_argument("--watch", type=int, default=0, metavar="N",
+                    help="print a status line every N engine steps "
+                         "(0 = off): step, slots, queue, pool, tokens, "
+                         "SLO verdict")
+    ap.add_argument("--slo", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="evaluate the default serving SLOs (ttft p99, "
+                         "error rate, KV headroom) every engine step "
+                         "(default: on when --status-json/--prom/--watch)")
+    ap.add_argument("--profile", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="after the run, time the hot dispatch signatures "
+                         "and print the modeled-vs-measured calibration "
+                         "table + plan-regret audit (default: on when "
+                         "--status-json)")
     args = ap.parse_args()
+    if args.slo is None:
+        args.slo = bool(args.status_json or args.prom or args.watch)
+    if args.profile is None:
+        args.profile = bool(args.status_json)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -148,6 +175,10 @@ def main():
         tracing.install(tracer)
     acct = gemm_account.GemmAccountant()
     gemm_account.install(acct)
+    slo_monitor = None
+    if args.slo:
+        from repro.telemetry.slo import SloMonitor
+        slo_monitor = SloMonitor()
 
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, slots=args.slots,
@@ -169,6 +200,7 @@ def main():
                            draft_groups=args.draft_groups,
                            draft_format_policy=args.draft_format,
                            prefix_index_path=args.prefix_index,
+                           slo_monitor=slo_monitor,
                            fault=(FaultInjector.from_spec(args.fault_plan)
                                   if args.fault_plan else None))
 
@@ -190,7 +222,29 @@ def main():
             print(f"  req {rid} shed at submit: {e}")
 
     t0 = time.time()
-    outputs = engine.run()
+    if args.watch:
+        # run() is resumable: drain the engine --watch steps at a time,
+        # printing a live status line between slices.
+        outputs = {}
+        while True:
+            outputs = engine.run(max_steps=args.watch)
+            live = (sum(1 for r in engine.slot_req if r is not None)
+                    + len(engine.sched.waiting))
+            pool = engine.sched.pool
+            slo_tag = ""
+            if slo_monitor is not None and slo_monitor.last_report:
+                rep = slo_monitor.last_report
+                slo_tag = (" slo=OK" if rep.ok else
+                           f" slo=VIOLATING[{','.join(s.name for s in rep.statuses if not s.ok)}]")
+            print(f"  [watch] step {engine.step_idx}: "
+                  f"active {sum(1 for r in engine.slot_req if r is not None)}"
+                  f"/{engine.slots}, queue {len(engine.sched.waiting)}, "
+                  f"pool {pool.free_pages}/{pool.num_pages} free, "
+                  f"decode tokens {engine.sched.decode_tokens}{slo_tag}")
+            if not live:
+                break
+    else:
+        outputs = engine.run()
     dt = time.time() - t0
     total = sum(len(v) for v in outputs.values())
     m = engine.metrics()
@@ -240,6 +294,34 @@ def main():
                  if wait is not None and wait.count else ""))
     if args.gemm_table:
         print(acct.format_table())
+    prof = None
+    if args.profile:
+        # Continuous profiler at the final host sync point: time the hot
+        # dispatch signatures, join against the perf model, audit the
+        # plan cache's grants against their analytic runners-up.
+        from repro.telemetry.profiler import DispatchProfiler
+        prof = DispatchProfiler(acct)
+        prof.sample()
+        print(prof.format_calibration_table())
+        audit = prof.regret_audit()
+        for e in audit:
+            verdict = ("REGRET" if e["flagged"] else "ok")
+            print(f"  regret audit {e['signature']}: granted "
+                  f"{e['granted_route']} {e['granted_s'] * 1e6:.1f}us vs "
+                  f"runner-up {e['runner_route']} "
+                  f"{e['runner_s'] * 1e6:.1f}us -> {verdict}")
+    if slo_monitor is not None and slo_monitor.last_report is not None:
+        print(slo_monitor.last_report.format_report())
+    if args.prom:
+        from repro.telemetry.export import write_prometheus
+        write_prometheus(args.prom)
+        print(f"wrote prometheus exposition -> {args.prom}")
+    if args.status_json:
+        from repro.telemetry.export import write_health
+        write_health(args.status_json, engine=engine, profiler=prof,
+                     slo_report=(slo_monitor.last_report
+                                 if slo_monitor else None))
+        print(f"wrote health snapshot -> {args.status_json}")
     if tracer is not None:
         tracing.uninstall()
         tracer.export(args.trace)

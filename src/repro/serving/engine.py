@@ -185,7 +185,8 @@ class ServingEngine:
                  draft_config: Optional[ArchConfig] = None,
                  draft_groups: int = 1,
                  draft_format_policy: Optional[str] = None,
-                 prefix_index_path: Optional[str] = None):
+                 prefix_index_path: Optional[str] = None,
+                 slo_monitor=None):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -359,6 +360,10 @@ class ServingEngine:
         self.fault = fault
         self.debug_audit = bool(debug_audit)
         self.quarantine = bool(quarantine)
+        # Optional repro.telemetry.slo.SloMonitor evaluated after every
+        # step (pure host-side registry reads — no device interaction,
+        # so greedy outputs are bit-identical with or without it).
+        self.slo_monitor = slo_monitor
         self._clock = clock or time.monotonic
         self.step_idx = 0
         self._deadline_at: Dict[int, float] = {}   # rid -> absolute deadline
@@ -605,6 +610,35 @@ class ServingEngine:
                 self._draft_pos[slot] = 0
 
     def step(self):
+        """One engine step (see :meth:`_step_impl`), followed by the
+        per-step observability hook: KV-pool occupancy and scheduler
+        depth land in the metrics registry as ``kv.*`` / ``serving.*``
+        gauges and the optional :class:`SloMonitor` evaluates its
+        objectives — all pure host-side bookkeeping, after the step's
+        device work is already submitted."""
+        self._step_impl()
+        self._observe_step()
+
+    def _observe_step(self):
+        """Publish per-step pool/scheduler state and evaluate SLOs.
+        Registry writes only — never touches device state or RNG, so
+        enabling it cannot perturb decode outputs."""
+        from repro.telemetry.registry import publish, registry
+        publish("kv", self.sched.pool.describe())
+        reg = registry()
+        reg.gauge("serving.queue_depth").set(len(self.sched.waiting))
+        reg.gauge("serving.active_slots").set(
+            sum(1 for r in self.slot_req if r is not None))
+        reg.gauge("serving.completed_requests").set(
+            self.sched.completed_requests)
+        reg.gauge("serving.cancelled_requests").set(
+            self.sched.cancelled_requests)
+        reg.gauge("serving.finished_requests").set(
+            self.sched.completed_requests + self.sched.cancelled_requests)
+        if self.slo_monitor is not None:
+            self.slo_monitor.observe(step=self.step_idx)
+
+    def _step_impl(self):
         """One engine step: up to ``prefill_chunk_quota`` prefill chunks,
         then ONE batched decode over the decoding slots.
 

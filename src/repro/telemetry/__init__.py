@@ -33,6 +33,23 @@ inside jitted code; timestamps are taken only at host sync points):
   pinned-geometry) and modeled time — the Fig. 7 traffic table for a
   live serving run.  Like ``trace_gemms``, hooks fire at jax *trace*
   time: counts are distinct compiled dispatches, not executed steps.
+
+Three analysis modules turn those raw streams into answers (these import
+jax / the planner lazily inside functions, so the package itself stays
+import-light and cycle-free):
+
+- :mod:`repro.telemetry.profiler` — the continuous profiler:
+  :class:`DispatchProfiler` times dispatches per plan signature at host
+  sync points, joins wall clock against ``perfmodel`` predictions and
+  the accountant's provenance into a per-(shape_class, fmt, plan_source)
+  **calibration table**, and runs the **plan-regret audit** (granted
+  plan vs analytic runner-up, feeding ``PlanCache.recalibrate``).
+- :mod:`repro.telemetry.slo` — declarative objectives over the registry
+  (tail latency percentile, error-rate, pool headroom) evaluated as
+  multi-window burn rates; :class:`SloMonitor` hooks the engine step.
+- :mod:`repro.telemetry.export` — Prometheus text exposition of the
+  whole registry plus the structured :func:`health` JSON snapshot
+  (``launch/serve.py --prom`` / ``--status-json``).
 """
 from repro.telemetry.registry import (Counter, Gauge, Histogram,
                                       MetricsRegistry, publish, registry,
@@ -40,7 +57,16 @@ from repro.telemetry.registry import (Counter, Gauge, Histogram,
 from repro.telemetry.tracing import Tracer, validate_trace
 from repro.telemetry.gemm_account import (GemmAccountant, GemmRecord,
                                           account_gemms, shape_class)
+from repro.telemetry.profiler import DispatchProfiler, profile_records
+from repro.telemetry.slo import (Slo, SloMonitor, SloReport, SloStatus,
+                                 default_slos)
+from repro.telemetry.export import (health, parse_prometheus,
+                                    render_prometheus, validate_health)
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "publish",
            "registry", "reset_registry", "Tracer", "validate_trace",
-           "GemmAccountant", "GemmRecord", "account_gemms", "shape_class"]
+           "GemmAccountant", "GemmRecord", "account_gemms", "shape_class",
+           "DispatchProfiler", "profile_records",
+           "Slo", "SloMonitor", "SloReport", "SloStatus", "default_slos",
+           "health", "parse_prometheus", "render_prometheus",
+           "validate_health"]

@@ -12,18 +12,26 @@ per-request / per-host-sync, never per device op.
 from __future__ import annotations
 
 import bisect
+import random
 import threading
+import zlib
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "registry", "reset_registry", "publish",
-           "DEFAULT_LATENCY_EDGES_S"]
+           "DEFAULT_LATENCY_EDGES_S", "DEFAULT_MAX_SAMPLES"]
 
 # Prometheus-style latency edges, in seconds: sub-ms decode steps up to
 # multi-second stalls.  Values past the last edge land in +Inf.
 DEFAULT_LATENCY_EDGES_S: Tuple[float, ...] = (
     0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
     0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+# Retained-sample cap per histogram.  Below the cap percentiles are
+# exact; past it a uniform reservoir (Algorithm R) bounds memory for
+# long-lived serving processes while keeping percentiles an unbiased
+# estimate.  Bucket counts, count and sum always stay exact.
+DEFAULT_MAX_SAMPLES: int = 4096
 
 
 class Counter:
@@ -55,36 +63,59 @@ class Gauge:
 
 
 class Histogram:
-    """Fixed-bucket histogram + retained samples for exact percentiles.
+    """Fixed-bucket histogram + retained-sample reservoir for percentiles.
 
     ``bucket_counts()`` returns *cumulative* counts per edge (count of
     samples ``<= edge``) plus the +Inf total, the standard export shape.
+    At most ``max_samples`` raw observations are retained: below the cap
+    percentiles are exact; past it Algorithm R keeps a uniform reservoir
+    (seeded per metric name, so runs are reproducible) and percentiles
+    become unbiased estimates.  ``count``/``total``/buckets stay exact.
     """
 
-    __slots__ = ("name", "edges", "count", "total", "_bucket", "_samples",
-                 "_sorted")
+    __slots__ = ("name", "edges", "count", "total", "max_samples",
+                 "_bucket", "_samples", "_sorted", "_rng")
 
     def __init__(self, name: str,
-                 edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S):
+                 edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S,
+                 max_samples: int = DEFAULT_MAX_SAMPLES):
         if not edges or list(edges) != sorted(float(e) for e in edges):
             raise ValueError(f"histogram {name}: edges must be a "
                              f"non-empty ascending sequence, got {edges!r}")
+        if max_samples < 1:
+            raise ValueError(f"histogram {name}: max_samples must be "
+                             f">= 1, got {max_samples}")
         self.name = name
         self.edges: Tuple[float, ...] = tuple(float(e) for e in edges)
         self.count = 0
         self.total = 0.0
+        self.max_samples = int(max_samples)
         self._bucket = [0] * (len(self.edges) + 1)   # last = +Inf
         self._samples: List[float] = []
         self._sorted = True
+        self._rng = random.Random(zlib.crc32(name.encode("utf-8")))
 
     def observe(self, v: float) -> None:
         v = float(v)
         self.count += 1
         self.total += v
         self._bucket[bisect.bisect_left(self.edges, v)] += 1
-        if self._samples and v < self._samples[-1]:
-            self._sorted = False
-        self._samples.append(v)
+        if len(self._samples) < self.max_samples:
+            if self._samples and v < self._samples[-1]:
+                self._sorted = False
+            self._samples.append(v)
+        else:
+            # Algorithm R: sample i (0-based) replaces a reservoir slot
+            # with probability max_samples / (i + 1).
+            j = self._rng.randrange(self.count)
+            if j < self.max_samples:
+                self._samples[j] = v
+                self._sorted = False
+
+    @property
+    def retained(self) -> int:
+        """Raw observations currently held (<= ``max_samples``)."""
+        return len(self._samples)
 
     def bucket_counts(self) -> List[Tuple[float, int]]:
         out, cum = [], 0
@@ -135,9 +166,9 @@ class MetricsRegistry:
         return self._get_or_make(name, Gauge)
 
     def histogram(self, name: str,
-                  edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S
-                  ) -> Histogram:
-        return self._get_or_make(name, Histogram, edges)
+                  edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S,
+                  max_samples: int = DEFAULT_MAX_SAMPLES) -> Histogram:
+        return self._get_or_make(name, Histogram, edges, max_samples)
 
     def get(self, name: str) -> Optional[object]:
         return self._metrics.get(name)

@@ -178,9 +178,11 @@ class trace_to:
 _REQUIRED = ("name", "ph", "ts", "pid", "tid")
 
 
-def validate_trace(doc: Dict) -> List[str]:
+def validate_trace(doc: Dict, require_names: tuple = ()) -> List[str]:
     """Chrome trace-event schema check.  Returns problem strings
-    (empty list = valid, non-empty trace)."""
+    (empty list = valid, non-empty trace).  ``require_names`` lists
+    event names that must appear at least once (coverage assertions for
+    known spans, e.g. ``graph.program`` in a compiled serving trace)."""
     errs: List[str] = []
     if not isinstance(doc, dict):
         return [f"trace document is {type(doc).__name__}, not an object"]
@@ -189,10 +191,12 @@ def validate_trace(doc: Dict) -> List[str]:
         return ["traceEvents missing or not a list"]
     if not ev:
         return ["traceEvents is empty"]
+    seen = set()
     for i, e in enumerate(ev):
         if not isinstance(e, dict):
             errs.append(f"event {i} is not an object")
             continue
+        seen.add(e.get("name"))
         for key in _REQUIRED:
             if key not in e:
                 errs.append(f"event {i} ({e.get('name', '?')}) missing "
@@ -202,16 +206,22 @@ def validate_trace(doc: Dict) -> List[str]:
                         f"event without dur")
         if not isinstance(e.get("ts", 0), int):
             errs.append(f"event {i}: ts must be integer microseconds")
+        if "args" in e and not isinstance(e["args"], dict):
+            errs.append(f"event {i} ({e.get('name', '?')}): args must "
+                        f"be an object")
         if errs and len(errs) > 20:
             errs.append("... (truncated)")
             break
+    for name in require_names:
+        if name not in seen:
+            errs.append(f"required event {name!r} never appears")
     return errs
 
 
-def validate_trace_file(path: str) -> List[str]:
+def validate_trace_file(path: str, require_names: tuple = ()) -> List[str]:
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         return [f"unreadable trace {path}: {e}"]
-    return validate_trace(doc)
+    return validate_trace(doc, require_names=require_names)

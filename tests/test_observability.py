@@ -1,0 +1,454 @@
+"""Observability layer (PR 9): continuous profiler + plan-quality audit,
+SLO burn-rate monitors, Prometheus/health exposition — and the standing
+contract that none of it perturbs serving outputs.
+
+Covers: histogram reservoir bound, Prometheus round-trip for every
+metric type, the calibration join counting grouped dispatches exactly
+once, PlanCache.recalibrate/runner_up, SLO evaluation + burn windows,
+health() schema validation, graph.program spans, kv.* per-step gauges,
+and greedy bit-identity with the full observability stack on vs off."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import autotune, dispatch, perfmodel
+from repro.graph import GraphBuilder, compile_graph
+from repro.graph import fuse as fuse_mod
+from repro.graph import ir as ir_mod
+from repro.graph import schedule as sched_mod
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServingEngine
+from repro.telemetry import export as export_mod
+from repro.telemetry import gemm_account, tracing
+from repro.telemetry.profiler import DispatchProfiler
+from repro.telemetry.registry import (DEFAULT_MAX_SAMPLES, Histogram,
+                                      MetricsRegistry, registry,
+                                      reset_registry)
+from repro.telemetry.slo import (Slo, SloMonitor, Window, default_slos)
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(autouse=True)
+def clean_telemetry():
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+    reset_registry()
+    tracing.uninstall()
+    gemm_account.uninstall()
+    perfmodel.clear_calibration()
+    yield
+    tracing.uninstall()
+    gemm_account.uninstall()
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+    reset_registry()
+    perfmodel.clear_calibration()
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def _cfg():
+    cfg = get_config("gemma_2b").reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                               vocab=128, n_heads=2, n_kv_heads=1,
+                               head_dim=32)
+
+
+# -- histogram reservoir (satellite: bounded retained samples) ----------------
+
+
+def test_histogram_reservoir_bounds_memory():
+    h = Histogram("r.lat_s", edges=(0.5,), max_samples=64)
+    for i in range(1000):
+        h.observe(float(i))
+    assert h.retained == 64                  # the bound holds
+    assert h.count == 1000                   # exact count survives
+    assert h.total == sum(range(1000))       # exact sum survives
+    assert h.bucket_counts() == [(0.5, 1), (float("inf"), 1000)]
+    # the reservoir is a uniform sample of [0, 1000): its median is a
+    # sane estimate, not garbage pinned to one end
+    assert 100.0 < h.percentile(50) < 900.0
+
+
+def test_histogram_exact_below_cap_and_default_cap():
+    h = Histogram("r.small_s", edges=(1.0,), max_samples=8)
+    for v in (5.0, 1.0, 3.0):
+        h.observe(v)
+    assert h.retained == 3
+    assert h.percentile(0) == 1.0 and h.percentile(100) == 5.0
+    assert Histogram("r.dflt_s").max_samples == DEFAULT_MAX_SAMPLES
+    with pytest.raises(ValueError):
+        Histogram("r.bad_s", max_samples=0)
+    # registry passes the cap through
+    reg = MetricsRegistry()
+    assert reg.histogram("x.h", max_samples=16).max_samples == 16
+
+
+def test_histogram_reservoir_deterministic_per_name():
+    def fill(name):
+        h = Histogram(name, edges=(0.5,), max_samples=16)
+        for i in range(200):
+            h.observe(float(i))
+        return list(h._samples)
+    assert fill("a.h_s") == fill("a.h_s")    # seeded by name: reproducible
+
+
+# -- prometheus exposition round-trip -----------------------------------------
+
+
+def test_prometheus_round_trips_every_metric_type():
+    reg = MetricsRegistry()
+    reg.counter("serving.tokens_total").inc(41)
+    reg.gauge("kv.free_pages").set(12.5)
+    h = reg.histogram("serving.ttft_s", edges=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    text = export_mod.render_prometheus(reg)
+    parsed = export_mod.parse_prometheus(text)
+    c = parsed[export_mod.sanitize_metric_name("serving.tokens_total")]
+    assert c["type"] == "counter" and c["value"] == 41
+    g = parsed[export_mod.sanitize_metric_name("kv.free_pages")]
+    assert g["type"] == "gauge" and g["value"] == 12.5
+    hp = parsed[export_mod.sanitize_metric_name("serving.ttft_s")]
+    assert hp["type"] == "histogram"
+    assert hp["count"] == h.count
+    assert hp["sum"] == pytest.approx(h.total)
+    assert hp["buckets"] == [(e, c) for e, c in h.bucket_counts()]
+
+
+def test_prometheus_name_sanitization():
+    assert export_mod.sanitize_metric_name("a.b-c d") == "a_b_c_d"
+    assert export_mod.sanitize_metric_name("9lives") == "_9lives"
+    with pytest.raises(ValueError):
+        export_mod.parse_prometheus("not a metric line at all!!")
+
+
+# -- the calibration join -----------------------------------------------------
+
+
+def test_calibration_join_counts_grouped_dispatch_once():
+    """Three group-fused sibling GEMMs execute as ONE grouped launch:
+    the calibration table must attribute ONE dispatch (kind=grouped,
+    plan_source=program) — and time it as one signature."""
+    m, d, n = 8, 64, 48
+    b = GraphBuilder()
+    x = b.input((m, d), "float32")
+    ws = [b.input((d, n), "float32") for _ in range(3)]
+    b.output(*(b.gemm(x, w, fmt="fp32") for w in ws))
+    grouped = fuse_mod.fuse(b.build(), rules=(fuse_mod.group_siblings,))
+    assert any(isinstance(nd, ir_mod.GroupNode) for nd in grouped.nodes)
+    args = (_arr(m, d), _arr(d, n), _arr(d, n), _arr(d, n))
+    with gemm_account.account_gemms() as acct:
+        prog = compile_graph(grouped, fuse=False)
+        prog(*args)
+    assert len(acct.records) == 1            # the PR-8 suppression contract
+    prof = DispatchProfiler(acct, iters=1)
+    assert prof.sample() == 1                # one signature timed, not three
+    rows = prof.calibration_table()
+    assert len(rows) == 1
+    (row,) = rows
+    assert row.dispatches == 1 and row.grouped == 1
+    assert row.plan_source == "program"
+    assert row.signatures == 1 and row.sampled == 1
+    assert row.measured_s > 0 and row.modeled_s > 0
+    assert row.error_ratio == row.error_ratio   # finite join
+    assert row.time_share == pytest.approx(1.0)
+
+
+def test_calibration_covers_planned_and_unplanned_traffic():
+    a, b = _arr(16, 64), _arr(64, 32)
+    with gemm_account.account_gemms() as acct:
+        dispatch.mte_gemm(a, b, backend="pallas")   # planner-granted
+        dispatch.mte_gemm(a, b, backend="pallas")   # cache hit
+        dispatch.mte_gemm(a, b, backend="xla")      # planner-bypassing
+    prof = DispatchProfiler(acct, iters=1)
+    assert prof.sample() == 2                       # 2 distinct signatures
+    srcs = {r.plan_source for r in prof.calibration_table()}
+    assert "unplanned" in srcs and ("analytic" in srcs or
+                                    "measured" in srcs)
+    assert "cache-hit" in srcs
+    # the unplanned xla record still carries an analytic modeled time
+    xla = [r for r in acct.records if r.backend == "xla"]
+    assert xla and xla[0].modeled_s is not None and xla[0].modeled_s > 0
+    # shares sum to 1 over measured rows
+    assert sum(r.time_share for r in prof.calibration_table()) == \
+        pytest.approx(1.0)
+    # profiler's own measurement launches never pollute the account
+    assert len(acct.records) == 3
+
+
+def test_install_calibration_feeds_perfmodel():
+    a, b = _arr(16, 64), _arr(64, 32)
+    with gemm_account.account_gemms() as acct:
+        dispatch.mte_gemm(a, b, backend="xla")
+    prof = DispatchProfiler(acct, iters=1)
+    prof.sample()
+    assert prof.install_calibration() >= 1
+    cal = perfmodel.calibration()
+    assert cal and all(v > 0 for v in cal.values())
+    base = perfmodel.analytic_seconds(16, 32, 64)
+    scaled = perfmodel.calibrated_seconds(base, "tall_skinny", "fp32")
+    key = "tall_skinny/fp32"
+    if key in cal:
+        assert scaled == pytest.approx(base * cal[key])
+    with pytest.raises(ValueError):
+        perfmodel.set_calibration("square", "fp32", float("inf"))
+    perfmodel.clear_calibration()
+    assert perfmodel.calibration() == {}
+
+
+# -- plan-regret audit + recalibrate ------------------------------------------
+
+
+def test_runner_up_differs_from_grant():
+    a, b = _arr(64, 64), _arr(64, 48)
+    dispatch.mte_gemm(a, b, backend="pallas")
+    cache = autotune.plan_cache()
+    (sig,) = list(cache._plans)
+    granted = cache._plans[sig]
+    runner = cache.runner_up(sig)
+    assert runner is not None
+    assert (runner.geometry != granted.geometry
+            or runner.route != granted.route)
+    assert cache.runner_up(dataclasses.replace(sig, m=999)) is None
+
+
+def test_regret_audit_and_recalibrate():
+    a, b = _arr(64, 64), _arr(64, 48)
+    with gemm_account.account_gemms() as acct:
+        dispatch.mte_gemm(a, b, backend="pallas")
+        dispatch.mte_gemm(a, b, backend="pallas")
+    prof = DispatchProfiler(acct, iters=1)
+    prof.sample()
+    audit = prof.regret_audit(top_k=2)
+    assert len(audit) == 1
+    (e,) = audit
+    assert e["dispatches"] == 2
+    assert e["granted_s"] > 0 and e["runner_s"] > 0
+    assert isinstance(e["flagged"], bool)
+    # recalibrate re-grants from measurement and replaces the entry
+    cache = autotune.plan_cache()
+    (sig,) = list(cache._plans)
+    new = cache.recalibrate(sig)
+    assert new.source == "measured" and new.measured_s is not None
+    assert cache._plans[sig] is new
+    summary = prof.summary()
+    assert summary["regret"]["audited"] == 1
+    assert summary["sampled"] >= 1
+
+
+# -- SLO monitor --------------------------------------------------------------
+
+
+def test_slo_vacuous_when_unobserved():
+    mon = SloMonitor(default_slos())
+    rep = mon.observe(step=1)
+    assert rep.ok and not rep.breaching
+    assert all(not s.observed for s in rep.statuses)
+
+
+def test_slo_violation_breaching_and_burn_windows():
+    reg = registry()
+    reg.gauge("q.depth").set(50.0)
+    t = [0.0]
+    mon = SloMonitor(
+        (Slo("depth", "q.depth", "max", 10.0),),
+        windows=(Window("short", 1.0), Window("long", 10.0)),
+        budget_frac=0.5, clock=lambda: t[0])
+    r1 = mon.observe(step=1)
+    (s1,) = r1.statuses
+    assert not s1.ok and s1.observed and s1.value == 50.0
+    # 100% bad / 50% budget = burn 2.0 in both windows -> breaching
+    assert s1.burn_rates == {"short": 2.0, "long": 2.0}
+    assert s1.breaching and r1.breaching == ("depth",)
+    # metric recovers: ok again, short window empties of bad events
+    reg.gauge("q.depth").set(1.0)
+    t[0] = 2.0
+    r2 = mon.observe(step=2)
+    (s2,) = r2.statuses
+    assert s2.ok and not s2.breaching
+    assert s2.burn_rates["short"] == 0.0     # bad event aged out
+    assert s2.burn_rates["long"] == 1.0      # 1 bad / 2 evals / 0.5 budget
+    # verdict gauges + counters mirrored into the registry
+    assert reg.get("slo.depth.ok").value == 1.0
+    assert reg.get("slo.violations").value == 1.0
+    assert reg.get("slo.evaluations").value == 2.0
+
+
+def test_slo_ratio_and_min_objectives():
+    reg = registry()
+    reg.gauge("s.err").set(3.0)
+    reg.gauge("s.total").set(100.0)
+    reg.gauge("s.free").set(1.0)
+    reg.gauge("s.cap").set(100.0)
+    mon = SloMonitor((
+        Slo("err_rate", "s.err", "max", 0.05, total="s.total"),
+        Slo("headroom", "s.free", "min", 0.10, total="s.cap"),
+    ))
+    rep = mon.observe()
+    by = {s.name: s for s in rep.statuses}
+    assert by["err_rate"].ok and by["err_rate"].value == pytest.approx(0.03)
+    assert not by["headroom"].ok
+    assert by["headroom"].value == pytest.approx(0.01)
+    # a zero denominator is "not observed", never a division crash
+    reg.gauge("s.total").set(0.0)
+    rep2 = mon.observe()
+    assert {s.name: s.observed for s in rep2.statuses}["err_rate"] is False
+    d = rep2.as_dict()
+    assert isinstance(d["statuses"], list) and "ok" in d
+    with pytest.raises(ValueError):
+        Slo("bad", "x", "between", 1.0)
+    with pytest.raises(ValueError):
+        SloMonitor((Slo("a", "x", "max", 1.0),
+                    Slo("a", "y", "max", 1.0)))
+
+
+# -- health snapshot ----------------------------------------------------------
+
+
+def test_health_schema_and_validation():
+    doc = export_mod.health(timestamp=123.0)
+    assert export_mod.validate_health(doc) == []
+    assert doc["kv"] is None and doc["slo"] is None
+    assert doc["generated_unix_s"] == 123.0
+    # a wrong version and a sampled row with a non-finite ratio both fail
+    bad = dict(doc, version=99)
+    assert any("version" in e for e in export_mod.validate_health(bad))
+    bad2 = dict(doc, calibration={"rows": [
+        {"shape_class": "square", "fmt": "fp32", "plan_source": "x",
+         "dispatches": 1, "sampled": 1, "error_ratio": float("nan")}]})
+    assert any("error_ratio" in e for e in export_mod.validate_health(bad2))
+    assert export_mod.validate_health([]) != []
+
+
+def test_write_health_refuses_invalid(tmp_path, monkeypatch):
+    path = tmp_path / "h.json"
+    doc = export_mod.write_health(str(path), timestamp=1.0)
+    assert path.exists() and doc["version"] == 1
+    broken = dict(doc)
+    del broken["registry"]
+    monkeypatch.setattr(export_mod, "health", lambda **kw: broken)
+    with pytest.raises(ValueError):
+        export_mod.write_health(str(tmp_path / "h2.json"), timestamp=1.0)
+    assert not (tmp_path / "h2.json").exists()
+
+
+# -- graph.program spans ------------------------------------------------------
+
+
+def test_graph_program_span_emitted_with_args():
+    m, d, n = 8, 64, 48
+    b = GraphBuilder()
+    x = b.input((m, d), "float32")
+    ws = [b.input((d, n), "float32") for _ in range(3)]
+    b.output(*(b.gemm(x, w, fmt="fp32") for w in ws))
+    grouped = fuse_mod.fuse(b.build(), rules=(fuse_mod.group_siblings,))
+    prog = compile_graph(grouped, fuse=False)
+    tr = tracing.install(tracing.Tracer())
+    try:
+        prog(_arr(m, d), _arr(d, n), _arr(d, n), _arr(d, n))
+    finally:
+        tracing.uninstall()
+    spans = [e for e in tr.events if e["name"] == "graph.program"]
+    assert len(spans) == 1
+    args = spans[0]["args"]
+    assert args["signature"] == prog.signature
+    assert args["nodes"] == len(prog.graph.nodes)
+    assert args["grouped"] == 1
+    assert args["dispatches"] == prog.n_dispatches
+    # validate_trace coverage extension: required names enforced
+    assert tracing.validate_trace(tr.to_json(),
+                                  require_names=("graph.program",)) == []
+    errs = tracing.validate_trace(tr.to_json(),
+                                  require_names=("nonexistent.span",))
+    assert any("nonexistent.span" in e for e in errs)
+
+
+def test_validate_trace_rejects_non_dict_args():
+    doc = {"traceEvents": [{"name": "a", "ph": "i", "ts": 0, "pid": 1,
+                            "tid": 1, "args": "oops"}]}
+    assert any("args" in e for e in tracing.validate_trace(doc))
+
+
+# -- engine integration: kv gauges + bit-identity with the stack on -----------
+
+
+def _run_engine(params, cfg, prompts, max_tokens=5, **kw):
+    engine = ServingEngine(params, cfg, slots=2, cache_len=64,
+                           prefill_len=16, **kw)
+    for rid, p in enumerate(prompts):
+        engine.submit(Request(rid=rid, prompt=p, max_tokens=max_tokens))
+    outputs = engine.run()
+    return engine, outputs
+
+
+def test_engine_publishes_kv_gauges_each_step():
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [RNG.integers(0, cfg.vocab, size=7, dtype=np.int32)]
+    engine, _ = _run_engine(params, cfg, prompts)
+    reg = registry()
+    desc = engine.sched.pool.describe()
+    for key in desc:
+        g = reg.get(f"kv.{key}")
+        assert g is not None, key
+        assert g.value == desc[key]          # final step's snapshot
+    assert reg.get("serving.queue_depth").value == 0.0
+    assert reg.get("serving.active_slots").value == 0.0
+    assert reg.get("serving.finished_requests").value == len(prompts)
+
+
+def test_engine_outputs_bit_identical_with_observability_stack():
+    """The full PR-9 stack — profiler, SLO monitor, exporter, tracer,
+    accountant — enabled end to end must not change a single greedy
+    token vs a run with everything off."""
+    cfg = _cfg()
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=size, dtype=np.int32)
+               for size in (5, 9, 13)]
+
+    _, base = _run_engine(params, cfg, prompts)   # everything OFF
+
+    reset_registry()
+    autotune.reset_cache()
+    sched_mod.reset_programs()
+    tracer = tracing.install(tracing.Tracer())
+    acct = gemm_account.install(gemm_account.GemmAccountant())
+    mon = SloMonitor(default_slos(ttft_p99_s=300.0, error_rate=0.9,
+                                  min_free_page_frac=0.0))
+    try:
+        engine, observed = _run_engine(params, cfg, prompts,
+                                       slo_monitor=mon)
+        # the full post-run observability pass
+        prof = DispatchProfiler(acct, iters=1)
+        prof.sample()
+        prof.regret_audit(top_k=2)
+        text = export_mod.render_prometheus()
+        doc = export_mod.health(engine=engine, profiler=prof,
+                                slo_report=mon.last_report)
+    finally:
+        tracing.uninstall()
+        gemm_account.uninstall()
+
+    assert {r: list(v) for r, v in observed.items()} == \
+        {r: list(v) for r, v in base.items()}
+
+    # and the stack actually observed the run
+    assert mon.evaluations == engine.step_idx
+    assert mon.last_report is not None and mon.last_report.ok
+    assert export_mod.validate_health(doc) == []
+    assert doc["slo"]["ok"] is True
+    assert doc["calibration"]["sampled"] >= 1
+    assert doc["kv"]["num_pages"] == engine.sched.pool.num_pages
+    parsed = export_mod.parse_prometheus(text)
+    assert any(k.startswith("kv_") for k in parsed)
+    assert any(k.startswith("slo_") for k in parsed)
+    assert tracing.validate_trace(tracer.to_json()) == []
