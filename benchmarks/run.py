@@ -626,6 +626,106 @@ def serving_latency_rows(smoke: bool = True):
     ]
 
 
+def serving_async_rows(smoke: bool = True):
+    """Async-pipelining section: the SAME greedy workload served with
+    the async pipelined run loop (pipeline depth 2: host scheduling of
+    step N+1 overlaps step N's device compute, tokens delivered one step
+    late) and with ``async_steps=False`` (every step host-synced).
+
+    Guarded facts: outputs are bit-identical (``greedy_match`` — async
+    changes *when* tokens reach the host, never *which* tokens),
+    ``steps_in_flight`` reached the pipeline depth, and the async run
+    spends at most a couple of trailing drain-only steps beyond the
+    synchronous step count (``extra_steps`` — the deterministic
+    work-conservation guard).  Tokens/s is reported best-of-3 for both
+    modes; on a multi-core host the async loop wins wall clock by
+    hiding scheduling under device compute, while on the 1-core CI
+    container the modes are work-equivalent and the ratio hovers at
+    parity, which is why the regression floor on it is a noise
+    tolerance.  The async trial exports ``BENCH_trace_async.json``; CI
+    validates that its decode spans overlap the next step's host spans.
+    """
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving import Request, ServingEngine
+    from repro.telemetry import tracing
+
+    cfg = get_config("gemma_2b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128,
+                              vocab=128, n_heads=2, n_kv_heads=1,
+                              head_dim=32)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = 6 if smoke else 12
+    base_tokens = 8 if smoke else 16
+    # Stagger completion lengths so the two slots finish on different
+    # steps: a freed slot then admits + prefills its successor WHILE the
+    # other slot's decode is in flight — the steps_in_flight=2 window
+    # (and the decode x prefill_chunk trace overlap) the rules assert.
+    budgets = [base_tokens + (i % 3) * 3 for i in range(n_req)]
+    # Multi-chunk prompts (prefill_chunk=8 below): a prefill spanning
+    # steps puts its continuing chunk in the NEXT step's host window,
+    # i.e. under the in-flight decode span.
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(10, 16)),
+                            dtype=np.int32) for _ in range(n_req)]
+
+    def trial(async_steps, trace_path=None):
+        tracer = tracing.install(tracing.Tracer()) if trace_path else None
+        try:
+            eng = ServingEngine(params, cfg, slots=2, cache_len=64,
+                                prefill_len=16, page_size=16,
+                                prefill_chunk=8,
+                                async_steps=async_steps)
+            warm = Request(rid=10_000, prompt=prompts[0], max_tokens=2)
+            eng.submit(warm)          # untimed: jit compilation
+            eng.run()
+            for rid, p in enumerate(prompts):
+                eng.submit(Request(rid=rid, prompt=p,
+                                   max_tokens=budgets[rid]))
+            t0 = time.perf_counter()
+            out = eng.run()
+            dt = time.perf_counter() - t0
+        finally:
+            if tracer is not None:
+                tracing.uninstall()
+                tracer.export(trace_path)
+        toks = {rid: tuple(r) for rid, r in out.items() if rid < 10_000}
+        total = sum(len(v) for v in toks.values())
+        return toks, total / max(dt, 1e-9), eng
+
+    sync_toks, sync_tps, sync_eng = trial(False)
+    async_toks, async_tps, eng = trial(True,
+                                       trace_path="BENCH_trace_async.json")
+    for _ in range(2):   # best-of-3 each: damp shared-box timer noise
+        sync_tps = max(sync_tps, trial(False)[1])
+        async_tps = max(async_tps, trial(True)[1])
+    match = 1.0 if async_toks == sync_toks else 0.0
+    # Deterministic bubble guard: the engine-step counts of the two
+    # modes on the identical workload.  Async may run a couple of
+    # trailing drain-only steps, but a pipelining bug that launches
+    # decodes for already-finished requests shows up here as a jump —
+    # unlike the wall-clock ratio, this cannot flake.
+    extra_steps = eng.step_idx - sync_eng.step_idx
+    return [
+        ("serving.async.tokens_per_s", "", f"{async_tps:.1f}"),
+        ("serving.async.sync_tokens_per_s", "", f"{sync_tps:.1f}"),
+        ("serving.async.speedup_vs_sync", "",
+         f"{async_tps / max(sync_tps, 1e-9):.3f}x"),
+        ("serving.async.extra_steps", "", f"{extra_steps}"),
+        ("serving.async.steps_in_flight", "",
+         f"{eng.steps_in_flight_max}"),
+        ("serving.async.greedy_match", "", f"{match:.1f}"),
+        ("serving.async.delivery_lag_mean", "",
+         f"{eng.metrics()['delivery_lag_mean']:.3f}"),
+    ]
+
+
 def perfmodel_calibration_rows(smoke: bool = True):
     """Continuous-profiler calibration: dispatch a mixed GEMM workload
     (planned pallas + planner-bypassing xla, square and tall/skinny)
@@ -771,6 +871,17 @@ REGRESSION_RULES = [
     ("serving.latency.itl_p99_ms",                None, None, 0.0),
     ("serving.latency.queue_wait_p50_ms",         None, None, 0.0),
     ("serving.latency.requests_measured",         None, None, 5.0),
+    # Async pipelining: bit-identity, reached pipeline depth and the
+    # step-count delta are deterministic — extra_steps is the real
+    # bubble guard (a pipeline bug that decodes already-finished
+    # requests jumps it from ~2 to ~10).  The tokens/s ratio is
+    # best-of-3 wall clock on a shared 1-core CI box where the two
+    # modes are work-equivalent (compute cannot overlap the host), so
+    # its floor is a noise tolerance, not the structural claim.
+    ("serving.async.greedy_match",                None, None, 1.0),
+    ("serving.async.steps_in_flight",             None, None, 2.0),
+    ("serving.async.extra_steps",                 None, 1.00, None),
+    ("serving.async.speedup_vs_sync",             None, None, 0.90),
     # Calibration error ratios are substrate wall-clock over a TPU model
     # (machine-dependent): the guard pins the mechanism — signatures got
     # measured, the regret audit ran, SLO verdicts are evaluated and OK
@@ -951,6 +1062,9 @@ def main() -> None:
 
     # -- latency percentiles from the telemetry registry (traced run) ------------
     csv_rows.extend(serving_latency_rows(smoke=args.smoke))
+
+    # -- async pipelined stepping: overlap host scheduling with device compute ---
+    csv_rows.extend(serving_async_rows(smoke=args.smoke))
 
     # -- continuous profiler: modeled-vs-measured calibration + regret audit -----
     csv_rows.extend(perfmodel_calibration_rows(smoke=args.smoke))

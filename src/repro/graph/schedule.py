@@ -23,6 +23,18 @@ program*:
    total (no reconfigurations) beats the sum of individual optima — the
    per-GEMM plans in the cache stay optimal; the program pins its
    overrides at execution via ``ops.mte_gemm(geometry=...)``.
+4. **Weight prefetch.**  For every consecutive kernel-node pair the
+   program emits a double-buffering plan: while node i computes, node
+   i+1's weight operands (graph *inputs* only — an operand produced
+   mid-program cannot be fetched earlier than it exists) stream from HBM
+   into the spare buffer.  The overlap window is
+   ``min(compute_i, weight_load_{i+1}, compute_{i+1})`` — you cannot
+   hide more traffic than the previous node runs for, and a load larger
+   than the next node's own time was already the bottleneck.  The plan
+   (``CompiledProgram.prefetch``) and its modeled saving
+   (``prefetch_saved_s``) annotate the program; ``modeled_s`` stays the
+   no-overlap figure so candidate scoring and regression baselines are
+   unchanged.
 
 Compiled programs are memoized per ``(graph signature, backend)``
 (:func:`compile_graph`) and per caller key (:func:`compile_cached`, which
@@ -38,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -156,6 +168,59 @@ def _program_time(g: Graph, cache: Optional[PlanCache] = None,
     return total
 
 
+def _weight_ids(g: Graph, node) -> Tuple[int, ...]:
+    """The value ids a kernel node reads as *weight* operands — what a
+    double-buffered prefetch would stream ahead of the launch."""
+    if isinstance(node, GemmNode):
+        return (node.b,)
+    if isinstance(node, GroupNode):
+        return ((node.stacked,) if node.stacked is not None
+                else tuple(node.weights))
+    return ()
+
+
+def _weight_load_seconds(g: Graph, node, profile) -> float:
+    """HBM read time of the node's weight operands at the format's
+    operand width — the traffic a prefetch can overlap with the previous
+    node's compute."""
+    fmt = formats_lib.FORMATS[node.fmt]
+    nbytes = 0
+    for vid in _weight_ids(g, node):
+        n = 1
+        for d in g.shape(vid):
+            n *= int(d)
+        nbytes += n * fmt.operand_jnp.itemsize
+    return nbytes / profile.hbm_bw_bytes_per_s
+
+
+def _prefetch_plan(g: Graph, plans: Dict[int, ExecutionPlan],
+                   profile) -> Tuple[Dict[int, Tuple[int, ...]], float]:
+    """Cross-layer weight double-buffering: for each consecutive kernel
+    pair (i, i+1), schedule node i+1's weight inputs to stream during
+    node i's compute.  Only graph *inputs* qualify (an operand produced
+    mid-program cannot be fetched before it exists).  Returns
+    (node idx -> value ids to prefetch while it runs, modeled seconds
+    the overlap hides).  The hidden time per pair is
+    ``min(compute_i, weight_load_{i+1}, compute_{i+1})``."""
+    idxs = list(g.kernel_nodes())
+    inputs = set(g.inputs)
+    plan: Dict[int, Tuple[int, ...]] = {}
+    saved = 0.0
+    for prev, nxt in zip(idxs, idxs[1:]):
+        ids = tuple(v for v in _weight_ids(g, g.nodes[nxt]) if v in inputs)
+        pp, np_ = plans.get(prev), plans.get(nxt)
+        if not ids or pp is None or np_ is None:
+            continue
+        win = min(pp.predicted_s,
+                  _weight_load_seconds(g, g.nodes[nxt], profile),
+                  np_.predicted_s)
+        if win <= 0.0:
+            continue
+        plan[prev] = ids
+        saved += win
+    return plan, saved
+
+
 def _vmem_ok(geom, profile) -> bool:
     return geom.vmem_bytes() <= int(profile.vmem_bytes
                                     * profile.vmem_budget_frac)
@@ -210,7 +275,12 @@ class CompiledProgram:
     ``plans`` maps kernel-node index → the granted/pinned ExecutionPlan
     (pallas backend; empty for xla).  ``n_source_dispatches`` is the
     dispatch count of the *unfused* source program — the eager baseline
-    the fusion win is measured against.
+    the fusion win is measured against.  ``prefetch`` maps kernel-node
+    index → the value ids of the NEXT kernel node's weight inputs that
+    double-buffer during this node's compute; ``prefetch_saved_s`` is
+    the modeled time that overlap hides (``modeled_s`` stays the
+    no-overlap figure — the pipelined estimate is
+    ``modeled_s - prefetch_saved_s``).
     """
 
     graph: Graph
@@ -221,6 +291,9 @@ class CompiledProgram:
     n_source_dispatches: int
     interpret: Optional[bool] = None
     generation: int = -1       # autotune.cache_generation() at compile
+    prefetch: Dict[int, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+    prefetch_saved_s: float = 0.0
 
     @property
     def n_dispatches(self) -> int:
@@ -230,6 +303,9 @@ class CompiledProgram:
         head = (f"program[{self.signature}] {self.n_dispatches} dispatches "
                 f"(eager {self.n_source_dispatches}), "
                 f"~{self.modeled_s * 1e6:.2f}us modeled")
+        if self.prefetch:
+            head += (f", prefetch {len(self.prefetch)} pair(s) "
+                     f"~{self.prefetch_saved_s * 1e6:.2f}us overlapped")
         return head + "\n" + self.graph.describe()
 
     def __call__(self, *args):
@@ -249,7 +325,8 @@ class CompiledProgram:
                     "nodes": len(g.nodes),
                     "grouped": sum(1 for n in g.nodes
                                    if isinstance(n, GroupNode)),
-                    "dispatches": self.n_dispatches})
+                    "dispatches": self.n_dispatches,
+                    "prefetch_pairs": len(self.prefetch)})
                 if tr is not None else tracing.NOOP.span("graph.program"))
         with span:
             env: Dict[int, object] = dict(zip(g.inputs, args))
@@ -554,15 +631,18 @@ def compiled_programs() -> List[CompiledProgram]:
 
 def compile_graph(graph: Graph, *, backend: str = "pallas",
                   fuse: bool = True,
-                  interpret: Optional[bool] = None) -> CompiledProgram:
+                  interpret: Optional[bool] = None,
+                  prefetch: bool = True) -> CompiledProgram:
     """Fuse, score, schedule and memoize one program.
 
     The grouped and ungrouped fusions are scored with the perf model and
     the cheaper program wins; the winner's kernel plans are granted by
     the process-global plan cache (→ JSON persistence) and then
-    tile-stabilized.  Memoized per ``(graph signature, backend)``.
+    tile-stabilized, and the cross-layer weight-prefetch plan is emitted
+    (``prefetch=False`` disables it).  Memoized per
+    ``(graph signature, backend)``.
     """
-    key = (graph.signature(), backend, interpret)
+    key = (graph.signature(), backend, interpret, prefetch)
     hit = _PROGRAMS.get(key)
     if hit is not None and hit.generation == autotune.cache_generation():
         _STATS["hits"] += 1
@@ -598,6 +678,8 @@ def compile_graph(graph: Graph, *, backend: str = "pallas",
 
     plans: Dict[int, ExecutionPlan] = {}
     modeled = 0.0
+    pf_plan: Dict[int, Tuple[int, ...]] = {}
+    pf_saved = 0.0
     if backend == "pallas":
         gcache = autotune.plan_cache()
         for idx in chosen.kernel_nodes():
@@ -607,27 +689,32 @@ def compile_graph(graph: Graph, *, backend: str = "pallas",
                                  gcache.n_cores)
         modeled = _program_time(chosen, plans=plans,
                                 profile=gcache.profile)
+        if prefetch:
+            pf_plan, pf_saved = _prefetch_plan(chosen, plans,
+                                               gcache.profile)
 
     prog = CompiledProgram(graph=chosen, plans=plans, backend=backend,
                            signature=graph.signature(), modeled_s=modeled,
                            n_source_dispatches=source_dispatches,
                            interpret=interpret,
-                           generation=autotune.cache_generation())
+                           generation=autotune.cache_generation(),
+                           prefetch=pf_plan, prefetch_saved_s=pf_saved)
     _remember(_PROGRAMS, key, prog)
     return prog
 
 
 def compile_cached(key, build: Callable[[], Graph], *,
                    backend: str = "pallas", fuse: bool = True,
-                   interpret: Optional[bool] = None) -> CompiledProgram:
+                   interpret: Optional[bool] = None,
+                   prefetch: bool = True) -> CompiledProgram:
     """Memoized compile that skips graph *construction* on a hit — the
     hot-path entry the model layers use (``key`` encodes everything the
     built graph depends on: shapes, dtypes, format, policy, backend)."""
-    full_key = (key, backend, interpret)
+    full_key = (key, backend, interpret, prefetch)
     prog = _KEYED.get(full_key)
     if prog is None or prog.generation != autotune.cache_generation():
         prog = compile_graph(build(), backend=backend, fuse=fuse,
-                             interpret=interpret)
+                             interpret=interpret, prefetch=prefetch)
         _remember(_KEYED, full_key, prog)
     else:
         _STATS["hits"] += 1

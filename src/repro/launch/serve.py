@@ -110,6 +110,11 @@ def main():
                     help="JSON path for the pool's published page hashes "
                          "— saved after run(), reloaded at start so a "
                          "restarted engine aliases surviving KV")
+    ap.add_argument("--no-async", action="store_true",
+                    help="synchronous engine stepping (pipeline depth 1: "
+                         "every decode's token is delivered on the host "
+                         "before the next step is scheduled) — escape "
+                         "hatch for the async pipelined run loop")
     ap.add_argument("--no-graph", action="store_true",
                     help="eager per-GEMM dispatch instead of compiled "
                          "repro.graph programs (debugging escape hatch; "
@@ -201,6 +206,7 @@ def main():
                            draft_format_policy=args.draft_format,
                            prefix_index_path=args.prefix_index,
                            slo_monitor=slo_monitor,
+                           async_steps=not args.no_async,
                            fault=(FaultInjector.from_spec(args.fault_plan)
                                   if args.fault_plan else None))
 

@@ -42,8 +42,8 @@ from repro.models.layers import (embed, init_embedding, init_mlp, init_norm,
                                  mlp, norm, unembed)
 
 __all__ = ["init_params", "forward", "prefill", "prefill_chunk", "decode",
-           "verify_chunk", "draft_from", "init_cache", "init_paged_cache",
-           "loss_fn", "param_count"]
+           "decode_and_sample", "sample_token", "verify_chunk", "draft_from",
+           "init_cache", "init_paged_cache", "loss_fn", "param_count"]
 
 
 # -- init ---------------------------------------------------------------------
@@ -465,6 +465,59 @@ def decode(params, batch, cache, cfg: ArchConfig):
     x = norm(x, params["final_norm"], cfg.norm_type)
     logits = unembed(x, params["embedding"], cfg)
     return logits[:, 0], new_cache
+
+
+def sample_token(logits, key, temperature):
+    """Sample one token per row from ``logits`` on-device.
+
+    ``temperature`` is a scalar or (B,) vector; rows with temperature
+    <= 0 take the fp32 argmax (bit-identical to host-side
+    ``np.argmax`` of the same values — XLA and numpy both break ties on
+    the lowest index), rows with temperature > 0 draw from
+    ``jax.random.categorical`` under a per-row key
+    (``fold_in(key, row)``), so the whole sampling step stays inside the
+    async dispatch stream.  → (tokens (B,) int32, finite (B,) bool) —
+    ``finite`` is the row-wise NaN/inf quarantine predicate, computed
+    here so the host never needs the logits to check it."""
+    lf = jnp.asarray(logits, jnp.float32)
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32).reshape(-1),
+                             (lf.shape[0],))
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    row_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(lf.shape[0], dtype=jnp.uint32))
+    safe = jnp.where(temps > 0, temps, 1.0)
+    sampled = jax.vmap(jax.random.categorical)(
+        row_keys, lf / safe[:, None]).astype(jnp.int32)
+    tokens = jnp.where(temps > 0, sampled, greedy)
+    finite = jnp.isfinite(lf).all(axis=-1)
+    return tokens, finite
+
+
+def decode_and_sample(params, batch, cache, cfg: ArchConfig, *,
+                      key, temperatures, active_rows):
+    """One decode step with sampling fused into the same jitted program.
+
+    This is the async-serving entry point: the host never has to fetch
+    the (B, V) logits to pick a token, so a ``jax.jit`` of this function
+    returns device futures the engine can chain into the *next* step's
+    inputs before ever blocking.  ``batch["tokens"]`` doubles as the
+    carried last-token state: rows in ``active_rows`` are updated with
+    the freshly sampled token, inactive rows keep their previous value,
+    and the returned ``next_tokens`` feeds straight back in as the next
+    step's ``batch["tokens"]``.
+
+    → (tokens (B,) int32, finite (B,) bool, logits_f32 (B, V),
+    next_tokens (B, 1) int32, new_cache).  The fp32 logits remain an
+    output so fault-injection runs can still fetch and poison them
+    host-side; greedy rows are the argmax of exactly these values, so
+    host-side ``np.argmax`` re-derivation matches bit-for-bit."""
+    logits, new_cache = decode(params, batch, cache, cfg)
+    lf = jnp.asarray(logits, jnp.float32)
+    tokens, finite = sample_token(lf, key, temperatures)
+    active = jnp.asarray(active_rows, bool).reshape(-1)
+    next_tokens = jnp.where(active[:, None], tokens[:, None],
+                            jnp.asarray(batch["tokens"], jnp.int32))
+    return tokens, finite, lf, next_tokens, new_cache
 
 
 def verify_chunk(params, batch, cache, cfg: ArchConfig):

@@ -35,6 +35,30 @@ Three layers, policy separated from mechanism:
 Client API: ``engine.submit(Request(...)); engine.run()`` — see
 ``examples/serving_continuous.py``.
 
+Async pipelined step
+--------------------
+
+The run loop is asynchronous by default (``async_steps=True``,
+``pipeline_depth=2``; ``--no-async`` from the launcher).  Sampling
+happens *inside* the jitted decode program (``models.decode_and_sample``
+— greedy argmax + keyed categorical per row), the KV cache argument is
+donated so steps chain without copies, and the sampled token feeds the
+next launch as a carried device array.  Each step runs its host
+scheduling work (deadlines, admission, prefill chunks) while the
+previous step's decode is still on device, then retires that step — the
+ONE intentional blocking ``device_get`` per step — re-admits into any
+slot the delivery freed, and launches its own decode.  Delivery
+therefore lags launch by one step (``scheduler.delivery_lag_mean``,
+``serving.steps_in_flight`` / ``serving.results_stale_steps`` gauges,
+and a staleness note in ``telemetry.export.health()`` make the lag
+observable).  The pipeline flushes wherever host-visible output state
+is read or rewritten: sequence horizon, speculation, imminent eviction,
+due deadlines, ``snapshot()``, ``run()`` exit — and an armed
+``FaultInjector`` pins the effective depth to 1.  Greedy outputs are
+bit-identical with async on or off (both modes execute the same jitted
+program; only delivery timing differs — test-asserted across archs,
+speculation and mid-run eviction).
+
 Speculative decoding
 --------------------
 

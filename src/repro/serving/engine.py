@@ -13,6 +13,26 @@ The engine is the model-side half of the serving subsystem:
   (``models.init_paged_cache``) both read through the scheduler's page
   table.
 
+**Async pipelined stepping** (``async_steps=True``, the default): the
+decode step and its sampling run as ONE jitted program
+(``models.decode_and_sample``) whose results stay on device — the
+sampled token feeds the *next* step's inputs directly (the carried
+``batch["tokens"]`` array), so the host never blocks on logits to
+schedule more work.  Launched steps queue in a bounded in-flight deque
+(pipeline depth 2: step N+1's host work — admit, prefill chunks, evict
+checks — overlaps step N's device compute) and the host syncs exactly
+once per delivered step, on the sampled token + finite flag.  Token
+*delivery* (``req.output``, finish checks, latency notes) therefore lags
+the launch frontier by up to one step; the pipeline flushes — every
+in-flight step delivered, host state exact — at eviction, speculation,
+snapshot, deadline-cancellation, sequence-horizon and fault boundaries,
+so the resilience and rewind invariants below are unchanged.  The cache
+argument of the decode program is donated (``donate_argnums``):
+back-to-back decode steps update the paged slabs in place instead of
+copying them.  Greedy outputs are bit-identical with ``async_steps`` on
+or off (same program, same inputs — only delivery timing differs);
+``--no-async`` in ``launch/serve.py`` is the escape hatch.
+
 **Chunked prefill**: a prompt is prefilled in fixed-size
 ``prefill_chunk`` chunks (default: the whole ``prefill_len`` window)
 that write their KV *directly* into the request's pool pages
@@ -89,11 +109,12 @@ every step.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -186,7 +207,9 @@ class ServingEngine:
                  draft_groups: int = 1,
                  draft_format_policy: Optional[str] = None,
                  prefix_index_path: Optional[str] = None,
-                 slo_monitor=None):
+                 slo_monitor=None,
+                 async_steps: bool = True,
+                 pipeline_depth: int = 2):
         if format_policy is not None:
             cfg = dataclasses.replace(cfg, format_policy=format_policy)
         if kv_format is None and cfg.cache_quant:
@@ -274,8 +297,32 @@ class ServingEngine:
         # outer dict keyed by format policy (None = engine default), so
         # a request-supplied format compiles its own chunk pipeline once.
         self._prefill_fns: Dict[Optional[str], Dict[int, object]] = {}
-        self._decode = jax.jit(
-            lambda p, b, c: model_lib.decode(p, b, c, self.cfg))
+
+        # -- async pipelined stepping (see the module docstring) ---------------
+        # Decode + sampling compile as ONE program whose cache argument
+        # is donated (argnums: params=0, batch=1, cache=2) — back-to-back
+        # steps update the paged slabs in place.  The in-flight deque is
+        # the lagging delivery queue; ``pipeline_depth`` bounds how many
+        # *steps* may be launched-but-undelivered at once (2 = step N+1's
+        # host scheduling overlaps step N's device compute; faults force
+        # an effective depth of 1, i.e. fully synchronous).
+        self.async_steps = bool(async_steps)
+        self.pipeline_depth = (max(1, int(pipeline_depth))
+                               if self.async_steps else 1)
+        self._inflight: Deque[dict] = collections.deque()
+        self._flushing = False
+        self._inflight_peak = 0        # deepest pipeline this step
+        self.steps_in_flight_max = 0   # deepest pipeline ever (bench row)
+        self._last_tok = jnp.zeros((slots, 1), jnp.int32)
+        self._zero_key = jax.random.PRNGKey(0)  # greedy rows: no stream use
+        self._decode_step = jax.jit(
+            lambda p, b, c, key, temps, active: model_lib.decode_and_sample(
+                p, b, c, self.cfg, key=key, temperatures=temps,
+                active_rows=active),
+            donate_argnums=(2,))
+        self._seed_sample = jax.jit(model_lib.sample_token)
+        self._scatter_tok = jax.jit(
+            lambda lt, tok, slot: lt.at[slot, 0].set(tok))
 
         # -- prefix-index persistence (cross-engine prefix cache) --------------
         # JSON of the pool's published (page, hash) pairs, saved next to
@@ -391,6 +438,29 @@ class ServingEngine:
         return [e.req for e in
                 sorted(self.sched.waiting, key=lambda e: e.arrival)]
 
+    @property
+    def steps_in_flight(self) -> int:
+        """Distinct engine steps launched but not yet delivered (the
+        lagging queue depth; 0 == host state is exact)."""
+        return len({e["step"] for e in self._inflight})
+
+    def _make_batch(self, tokens, *, pos=None, table=None, slot=None,
+                    row_valid=None):
+        """Assemble the device batch dict every model entry point reads:
+        ``tokens`` plus optional per-row positions, page-table rows, the
+        prefill ``slot`` scalar and the stateful-arch ``row_valid`` mask
+        — one choke point instead of a hand-built dict per call site."""
+        batch = {"tokens": jnp.asarray(tokens)}
+        if pos is not None:
+            batch["pos"] = jnp.asarray(pos)
+        if table is not None:
+            batch["page_table"] = jnp.asarray(table)
+        if slot is not None:
+            batch["slot"] = jnp.int32(slot)
+        if row_valid is not None:
+            batch["row_valid"] = jnp.asarray(row_valid)
+        return batch
+
     def _chunk_fn(self, format_policy: Optional[str], chunk_idx: int):
         """The jitted prefill-chunk program for one (format, chunk
         index).  Compiled once per pair, then reused — all chunk indices
@@ -494,6 +564,10 @@ class ServingEngine:
             if self._watchdog is not None:
                 self._watchdog.disarm()
                 self._watchdog.check()  # straggler -> StragglerError
+        # Deliver every launched step before reporting: run() is the API
+        # boundary, so Responses (including "incomplete" partials) always
+        # carry the tokens of every step that ran.
+        self._flush_pipeline()
         out = dict(self._responses)
         for r in self.queue + [r for r in self.slot_req if r is not None]:
             out[r.rid] = Response(r.output, rid=r.rid, status="incomplete")
@@ -635,12 +709,18 @@ class ServingEngine:
             self.sched.cancelled_requests)
         reg.gauge("serving.finished_requests").set(
             self.sched.completed_requests + self.sched.cancelled_requests)
+        # Pipeline staleness: with async stepping, the counters above
+        # describe the last *delivered* step — up to ``pipeline_depth - 1``
+        # steps of device work are still in flight and intentionally NOT
+        # reported as finished (health() carries the same note).
+        reg.gauge("serving.steps_in_flight").set(self._inflight_peak)
+        reg.gauge("serving.results_stale_steps").set(self.steps_in_flight)
         if self.slo_monitor is not None:
             self.slo_monitor.observe(step=self.step_idx)
 
     def _step_impl(self):
         """One engine step: up to ``prefill_chunk_quota`` prefill chunks,
-        then ONE batched decode over the decoding slots.
+        then ONE batched decode+sample launch over the decoding slots.
 
         Chunks run first so a slot finishing its prefill joins the same
         step's decode batch (single-chunk prefills behave exactly like
@@ -656,24 +736,69 @@ class ServingEngine:
         with ring/recurrent per-slot state ``row_valid`` masks their
         batch rows so the carried chunk state survives the decode).
 
+        The launch does not block: sampling happens inside the decode
+        program, its token feeds the next step on device, and host
+        delivery (:meth:`_deliver_decode`) lags by up to
+        ``pipeline_depth - 1`` steps.  The pipeline flushes first at
+        every boundary that reads or rewrites host-visible output state:
+        sequence horizon, speculation, imminent eviction (and, via their
+        own call sites, deadlines / snapshots / faults).
+
         Containment: the injected :class:`FaultInjector` hooks fire at
         the step boundary (crash/straggle/alloc-failure) and per decode
         row (logit poison); non-finite logits quarantine only their slot.
         """
         self.step_idx += 1
+        self._inflight_peak = self.steps_in_flight
         if self.fault is not None:
             # May raise EngineCrash (supervised restart path) or arm a
             # pool allocation failure / sleep through a straggle.
             self.fault.step_begin(self.step_idx, pool=self.sched.pool)
         self._enforce_deadlines()
         self._run_prefill_chunks()
+        # Retire the previous step HERE — after this step's admit/prefill
+        # host work (which the in-flight decode span therefore overlaps)
+        # and before the decode-launch decisions below (which therefore
+        # see every delivered finish and never schedule a dead slot).
+        self._drain_to_depth()
+        # The retire may have freed slots that this step's run()-level
+        # admission could not see (delivery lags launch by one step).
+        # Re-admit into them now — work conservation: a finish never
+        # costs an idle slot-step relative to the synchronous loop.
+        if self.sched.waiting and any(r is None for r in self.slot_req):
+            with tracing.current().span("admit"):
+                self._admit()
+            self._run_prefill_chunks()
         decoding = [s for s, r in enumerate(self.slot_req)
                     if r is not None and s not in self._prefilling]
+        # Horizon boundary: a slot whose launched position reached
+        # cache_len finishes at delivery — flush so that lands before
+        # anything more is scheduled for it.
+        if self._inflight and any(int(self.slot_pos[s]) >= self.cache_len
+                                  for s in decoding):
+            self._flush_pipeline()
+            decoding = [s for s in decoding if self.slot_req[s] is not None
+                        and s not in self._prefilling]
         # Speculation depth for this step: the configured k clamped by
         # the scheduler's load policy, every slot's horizon room, and the
         # pages obtainable WITHOUT eviction — a full pool degrades the
         # step to k=1 (vanilla decode) instead of preempting anyone.
         k_step = self._spec_depth(decoding) if decoding else 1
+        if k_step >= 2 and self._inflight:
+            # Spec boundary: draft windows and accept/reject read
+            # req.output on the host every step — drain first.
+            self._flush_pipeline()
+            decoding = [s for s in decoding if self.slot_req[s] is not None
+                        and s not in self._prefilling]
+            k_step = self._spec_depth(decoding) if decoding else 1
+        # Eviction boundary: preemption requeues the victim with its
+        # host-visible output, so in-flight tokens must land first.
+        if self._inflight and decoding and self._needs_eviction(decoding,
+                                                                k_step):
+            self._flush_pipeline()
+            decoding = [s for s in decoding if self.slot_req[s] is not None
+                        and s not in self._prefilling]
+            k_step = self._spec_depth(decoding) if decoding else 1
         with tracing.current().span("evict"):
             for slot in decoding:
                 if self.slot_req[slot] is None or slot in self._prefilling:
@@ -685,6 +810,7 @@ class ServingEngine:
         decoding = [s for s in decoding if self.slot_req[s] is not None
                     and s not in self._prefilling]
         if not decoding:
+            self._drain_to_depth()
             if self.debug_audit:
                 self.sched.pool.audit()
             return
@@ -695,67 +821,211 @@ class ServingEngine:
             if self.debug_audit:
                 self.sched.pool.audit()
             return
-        tokens = np.zeros((self.slots, 1), np.int32)
+        self._launch_decode(decoding)
+        self._drain_to_depth()
+        if self.debug_audit:
+            self.sched.pool.audit()
+
+    # -- async pipeline --------------------------------------------------------
+    def _needs_eviction(self, decoding, k_step: int) -> bool:
+        """Host-side dry run of this step's pool demand (the same
+        arithmetic as :meth:`_spec_depth`'s no-evict clamp): True when
+        ``ensure_decode`` would have to preempt someone, i.e. the pages
+        wanted beyond what the decoding slots already own exceed the
+        allocatable (free + reclaimable cached-free) list."""
+        pool = self.sched.pool
+        need = 0
+        for slot in decoding:
+            entry = self.sched.active.get(slot)
+            if entry is None:
+                continue
+            owned = len(pool.pages_of(entry.arrival))
+            want = -(-(int(self.slot_pos[slot]) + k_step) // self.page_size)
+            need += max(0, want - owned)
+        return need > pool.free_pages
+
+    def _launch_decode(self, decoding):
+        """Submit one batched decode+sample program and queue its
+        delivery.  Nothing here blocks on the previous step: the token
+        inputs are the carried device-side last-token array (updated
+        *inside* the previous launch), and pos/table/temps are host
+        scheduler state."""
         table = np.full((self.slots, self.sched.max_pages_per_seq), -1,
                         np.int32)
+        temps = np.zeros(self.slots, np.float32)
+        active = np.zeros(self.slots, bool)
         for slot in decoding:
-            req = self.slot_req[slot]
-            if req.output:
-                tokens[slot, 0] = req.output[-1]
             table[slot] = self.sched.table_row(slot)
-        batch = {"tokens": jnp.asarray(tokens),
-                 "pos": jnp.asarray(self.slot_pos),
-                 "page_table": jnp.asarray(table)}
-        if self._stateful_rows:
-            # Row-valid mask: ring/recurrent cache rows of slots that are
-            # not decoding this step (still prefilling, or empty) keep
-            # their prior state inside the decode program itself.  Always
-            # passed for stateful archs so the jit signature is stable.
-            rv = np.zeros(self.slots, bool)
-            rv[decoding] = True
-            batch["row_valid"] = jnp.asarray(rv)
-        with tracing.current().span("decode"):
-            logits, self.cache = self._decode(self.params, batch,
-                                              self.cache)
-            self.sched.note_step(len(decoding))
-            logits = np.array(jnp.asarray(logits, jnp.float32))
+            temps[slot] = max(0.0, float(self.slot_req[slot].temperature))
+            active[slot] = True
+        if temps.any():
+            self._key, key = jax.random.split(self._key)
+        else:
+            key = self._zero_key   # all-greedy: the key stream is untouched
+        # Row-valid mask: ring/recurrent cache rows of slots that are
+        # not decoding this step keep their prior state inside the
+        # decode program itself.  Always passed for stateful archs so
+        # the jit signature is stable.
+        batch = self._make_batch(
+            self._last_tok, pos=self.slot_pos, table=table,
+            row_valid=active if self._stateful_rows else None)
+        # The decode span stays open until delivery: it covers the
+        # device-resident window, so async traces show decode visibly
+        # overlapping the NEXT step's admit/prefill/sample host spans.
+        span = tracing.current().span(
+            "decode", args={"step": self.step_idx, "rows": len(decoding)})
+        span.__enter__()
+        tok, finite, logits, self._last_tok, self.cache = self._decode_step(
+            self.params, batch, self.cache, key, jnp.asarray(temps),
+            jnp.asarray(active))
+        self._inflight.append({
+            "kind": "decode", "step": self.step_idx, "span": span,
+            "slots": list(decoding),
+            "reqs": {s: self.slot_req[s] for s in decoding},
+            "pos_after": {s: int(self.slot_pos[s]) + 1 for s in decoding},
+            "tok": tok, "finite": finite, "logits": logits,
+        })
+        for slot in decoding:
+            self.slot_pos[slot] += 1
+        self._inflight_peak = max(self._inflight_peak, self.steps_in_flight)
+        self.steps_in_flight_max = max(self.steps_in_flight_max,
+                                       self.steps_in_flight)
+
+    def _drain_to_depth(self):
+        """Deliver in-flight results down to the pipeline's depth bound.
+
+        Synchronous mode (``pipeline_depth`` 1, or any step while a
+        :class:`FaultInjector` is armed — its poison/sample semantics are
+        host-side and must fire in the same step the decode ran) flushes
+        everything.  Async mode retires every entry from *older* steps,
+        plus this step's own prefill *seeds* (a request's first token is
+        its TTFT — it never lags): the current step's decode launches
+        stay on device across the next
+        step's host scheduling window, which is the depth-2 pipeline —
+        step N's decode is still in flight while step N+1 admits and
+        prefills.  Crucially this runs *before* the next decode launch,
+        so launch decisions always see delivered finishes and never burn
+        a step decoding a request whose final token is merely undelivered
+        (the single-core "bubble" tax that would otherwise make async
+        strictly worse than sync when compute cannot overlap the host).
+        """
+        depth = 1 if self.fault is not None else self.pipeline_depth
+        if depth <= 1:
+            self._flush_pipeline()
+            return
+        while self._inflight and self._inflight[0]["step"] < self.step_idx:
+            self._retire_one()
+        # Seed tokens deliver in their own step: the first token is the
+        # TTFT-critical path, and lagging it would charge the *next*
+        # step's host window (admission, chunk compiles) to this
+        # request's time-to-first-token.  Only decode entries lag.
+        while self._inflight and self._inflight[0]["kind"] == "seed":
+            self._retire_one()
+
+    def _flush_pipeline(self):
+        """Deliver every launched step now — the synchronization barrier
+        at eviction / speculation / snapshot / horizon / deadline / fault
+        boundaries and at the end of :meth:`run`.  After a flush the
+        host-side state (outputs, finishes, releases) is exact."""
+        if self._flushing:
+            return
+        self._flushing = True
+        try:
+            while self._inflight:
+                self._retire_one()
+        finally:
+            self._flushing = False
+
+    def _retire_one(self):
+        """Deliver the oldest in-flight entry — the ONE intentional host
+        sync per step (sampled token + finite flag together)."""
+        entry = self._inflight.popleft()
+        try:
+            if entry["kind"] == "seed":
+                self._deliver_seed(entry)
+            else:
+                self._deliver_decode(entry)
+        finally:
+            span = entry.get("span")
+            if span is not None:
+                span.__exit__(None, None, None)
+
+    def _deliver_decode(self, entry):
+        """Host bookkeeping for one delivered decode step: append the
+        token, latency notes, finish / horizon checks, quarantine —
+        exactly what the synchronous engine did inline.  Slots whose
+        request finished, was evicted or cancelled after the launch are
+        discarded: their device-side write went to pages that are either
+        still owned or fully rewritten by a later owner's prefill
+        (launch order == device execution order)."""
+        tok, finite = jax.device_get((entry["tok"], entry["finite"]))
+        tok = np.asarray(tok).copy()
+        finite = np.asarray(finite).copy()
         if self.fault is not None:
-            for slot in decoding:
-                val = self.fault.poison_value(self.step_idx,
-                                              self.slot_req[slot].rid)
-                if val is not None:
-                    logits[slot] = val
-        if self.quarantine:
-            healthy = []
-            for slot in decoding:
-                if np.isfinite(logits[slot]).all():
-                    healthy.append(slot)
-                else:
-                    req = self.slot_req[slot]
+            # Poison fires on host logits exactly as the synchronous
+            # engine did: fetch the fp32 row, override the token with
+            # the legacy host-side sample, re-derive quarantine from the
+            # poisoned values.  (Faults force depth 1, so this runs in
+            # the same step the decode did.)
+            logits = None
+            for slot in entry["slots"]:
+                req = entry["reqs"][slot]
+                val = self.fault.poison_value(entry["step"], req.rid)
+                if val is None:
+                    continue
+                if logits is None:
+                    logits = np.array(jnp.asarray(entry["logits"],
+                                                  jnp.float32))
+                logits[slot] = val
+                finite[slot] = bool(np.isfinite(logits[slot]).all())
+                t = int(self._sample(logits[slot:slot + 1], req)[0])
+                tok[slot] = t
+                if self.slot_req[slot] is req:
+                    self._last_tok = self._scatter_tok(
+                        self._last_tok, jnp.int32(t), slot)
+        n_live = 0
+        with tracing.current().span("sample"):
+            for slot in entry["slots"]:
+                req = entry["reqs"][slot]
+                if req.done or self.slot_req[slot] is not req:
+                    continue   # finished/evicted after launch: discard
+                n_live += 1
+                if self.quarantine and not finite[slot]:
                     self._cancel_active(slot, PoisonedOutput(
                         f"non-finite logits for rid={req.rid} at step "
-                        f"{self.step_idx}", rid=req.rid))
-            decoding = healthy
-        with tracing.current().span("sample"):
-            for slot in decoding:
-                req = self.slot_req[slot]
-                if req is None:
+                        f"{entry['step']}", rid=req.rid))
                     continue
-                tok = int(self._sample(logits[slot: slot + 1], req)[0])
-                req.output.append(tok)
+                req.output.append(int(tok[slot]))
                 self._note_emitted(req, 1)
-                self.slot_pos[slot] += 1
                 done = self._finished(slot)
                 # Capacity guard: a sequence at the page-table horizon
                 # must finish now — there is no logical page for the
                 # next token.
-                if not done and int(self.slot_pos[slot]) >= self.cache_len:
+                if not done and entry["pos_after"][slot] >= self.cache_len:
                     self._record_done(req)
                     self.slot_req[slot] = None
                     self.slot_pos[slot] = 0
                     self.sched.release(slot, finished=True)
-        if self.debug_audit:
-            self.sched.pool.audit()
+        if n_live:
+            self.sched.note_step(n_live,
+                                 lag=self.step_idx - entry["step"])
+
+    def _deliver_seed(self, entry):
+        """Deliver a prefill seed token (the final chunk's on-device
+        sample): the first token of a freshly prefilled request."""
+        slot = entry["slots"][0]
+        req = entry["reqs"][slot]
+        tok, finite = jax.device_get((entry["tok"], entry["finite"]))
+        if req.done or self.slot_req[slot] is not req:
+            return
+        if self.quarantine and not bool(np.asarray(finite).reshape(-1)[0]):
+            self._cancel_active(slot, PoisonedOutput(
+                f"non-finite prefill logits for rid={req.rid} at step "
+                f"{entry['step']}", rid=req.rid))
+            return
+        req.output.append(int(np.asarray(tok).reshape(-1)[0]))
+        self._note_emitted(req, 1)
+        self._finished(slot)
 
     # -- chunked prefill -------------------------------------------------------
     def _run_prefill_chunks(self):
@@ -788,9 +1058,9 @@ class ServingEngine:
         c = st["chunk"]
         size = self.prefill_chunk
         toks = st["tokens"][c * size:(c + 1) * size]
-        batch = {"tokens": jnp.asarray(toks[None]),
-                 "page_table": jnp.asarray(self.sched.table_row(slot)[None]),
-                 "slot": jnp.int32(slot)}
+        batch = self._make_batch(toks[None],
+                                 table=self.sched.table_row(slot)[None],
+                                 slot=slot)
         if self.fault is not None:
             self.fault.chunk_fault(self.step_idx, req.rid, c)
         try:
@@ -811,20 +1081,48 @@ class ServingEngine:
         st["chunk"] = c + 1
         if st["chunk"] >= self.n_chunks:
             del self._prefilling[slot]
-            logits = np.array(jnp.asarray(logits, jnp.float32))
+            self.slot_pos[slot] = self.prefill_len
             if self.fault is not None:
+                # Fault-injection path stays fully synchronous (depth 1):
+                # poison overrides and quarantine need the host logits in
+                # the same step the chunk ran.
+                logits = np.array(jnp.asarray(logits, jnp.float32))
                 val = self.fault.poison_value(self.step_idx, req.rid)
                 if val is not None:
                     logits[:] = val
-            if self.quarantine and not np.isfinite(logits).all():
-                raise PoisonedOutput(
-                    f"non-finite prefill logits for rid={req.rid} at step "
-                    f"{self.step_idx}", rid=req.rid)
-            tok = int(self._sample(logits, req)[0])
-            req.output.append(tok)
-            self._note_emitted(req, 1)
-            self.slot_pos[slot] = self.prefill_len
-            self._finished(slot)
+                if self.quarantine and not np.isfinite(logits).all():
+                    raise PoisonedOutput(
+                        f"non-finite prefill logits for rid={req.rid} at "
+                        f"step {self.step_idx}", rid=req.rid)
+                tok = int(self._sample(logits, req)[0])
+                req.output.append(tok)
+                self._note_emitted(req, 1)
+                self._finished(slot)
+                if self.slot_req[slot] is req:
+                    self._last_tok = self._scatter_tok(
+                        self._last_tok, jnp.int32(tok), slot)
+                return
+            # Seed the first token on device: sample from the final
+            # chunk's logits without a host round-trip, scatter it into
+            # the carried last-token array (so the next decode launch
+            # reads it), and queue the host-side delivery.
+            temp = max(0.0, float(req.temperature))
+            if temp > 0.0:
+                self._key, key = jax.random.split(self._key)
+            else:
+                key = self._zero_key
+            tok, finite = self._seed_sample(
+                logits, key, jnp.full((1,), temp, jnp.float32))
+            self._last_tok = self._scatter_tok(self._last_tok, tok[0], slot)
+            self._inflight.append({
+                "kind": "seed", "step": self.step_idx, "span": None,
+                "slots": [slot], "reqs": {slot: req},
+                "tok": tok, "finite": finite,
+            })
+            self._inflight_peak = max(self._inflight_peak,
+                                      self.steps_in_flight)
+            self.steps_in_flight_max = max(self.steps_in_flight_max,
+                                           self.steps_in_flight)
 
     # -- speculative decoding --------------------------------------------------
     #
@@ -910,11 +1208,9 @@ class ServingEngine:
                 for c in range(self.n_chunks):
                     toks = window[c * self.prefill_chunk:
                                   (c + 1) * self.prefill_chunk]
-                    batch = {
-                        "tokens": jnp.asarray(toks[None]),
-                        "page_table": jnp.asarray(
-                            self._draft_table[slot][None]),
-                        "slot": jnp.int32(slot)}
+                    batch = self._make_batch(
+                        toks[None], table=self._draft_table[slot][None],
+                        slot=slot)
                     _, self.draft_cache = self._draft_chunk_fn(c)(
                         self.draft_params, batch, self.draft_cache)
                 self._draft_pos[slot] = self.prefill_len
@@ -946,10 +1242,9 @@ class ServingEngine:
             pos[s] = dp
             table[s] = self._draft_table[s]
             rv[s] = True
-        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
-                 "page_table": jnp.asarray(table)}
-        if self._draft_stateful:
-            batch["row_valid"] = jnp.asarray(rv)
+        batch = self._make_batch(
+            tokens, pos=pos, table=table,
+            row_valid=rv if self._draft_stateful else None)
         logits, self.draft_cache = self._draft_verify(
             self.draft_params, batch, self.draft_cache)
         return np.asarray(logits, np.float32)
@@ -991,10 +1286,9 @@ class ServingEngine:
                 pos[s] = int(self._draft_pos[s]) + i
                 table[s] = self._draft_table[s]
                 rv[s] = True
-            batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
-                     "page_table": jnp.asarray(table)}
-            if self._draft_stateful:
-                batch["row_valid"] = jnp.asarray(rv)
+            batch = self._make_batch(
+                tokens, pos=pos, table=table,
+                row_valid=rv if self._draft_stateful else None)
             logits, self.draft_cache = self._draft_decode(
                 self.draft_params, batch, self.draft_cache)
             logits = np.asarray(logits, np.float32)
@@ -1068,13 +1362,15 @@ class ServingEngine:
             pos[s] = self.slot_pos[s]
             table[s] = self.sched.table_row(s)
             rv[s] = True
-        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
-                 "page_table": jnp.asarray(table)}
-        if self._stateful_rows:
-            batch["row_valid"] = jnp.asarray(rv)
+        batch = self._make_batch(
+            tokens, pos=pos, table=table,
+            row_valid=rv if self._stateful_rows else None)
         with tracing.current().span("verify"):
             logits, self.cache = self._verify(self.params, batch, self.cache)
-            logits = np.array(jnp.asarray(logits, jnp.float32))  # (slots,k,V)
+            # ONE device->host transfer; copy only when poison may write.
+            logits = np.asarray(jnp.asarray(logits, jnp.float32))  # (slots,k,V)
+            if self.fault is not None:
+                logits = np.array(logits)
         self.spec_k_hist[k] = self.spec_k_hist.get(k, 0) + 1
         if self.fault is not None:
             for s in decoding:
@@ -1127,6 +1423,12 @@ class ServingEngine:
                 self.slot_pos[s] = 0
                 self.sched.release(s, finished=True)
                 done = True
+            if not done:
+                # Spec emits host-side: refresh the device-carried
+                # last-token array so a later k=1 async launch chains
+                # from the token speculation actually emitted.
+                self._last_tok = self._scatter_tok(
+                    self._last_tok, jnp.int32(req.output[-1]), s)
             if done:
                 self._draft_pos[s] = 0
                 self._slot_window.pop(s, None)
@@ -1199,9 +1501,8 @@ class ServingEngine:
                 pos[s] = int(self.slot_pos[s]) - length
                 table[s] = self.sched.table_row(s)
                 rv[s] = True
-            batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos),
-                     "page_table": jnp.asarray(table),
-                     "row_valid": jnp.asarray(rv)}
+            batch = self._make_batch(tokens, pos=pos, table=table,
+                                     row_valid=rv)
             _, self.cache = self._verify(self.params, batch, self.cache)
 
     def _warm_spec_program(self):
@@ -1351,6 +1652,12 @@ class ServingEngine:
         if not self._deadline_at:
             return
         now = self._clock()
+        if self._inflight and any(dl <= now
+                                  for dl in self._deadline_at.values()):
+            # Deadline boundary: the cancelled Response snapshots
+            # req.output — deliver in-flight tokens first so the partial
+            # output is complete up to the cancel point.
+            self._flush_pipeline()
         for slot, req in enumerate(self.slot_req):
             if (req is not None
                     and self._deadline_at.get(req.rid, now + 1) <= now):
@@ -1379,6 +1686,10 @@ class ServingEngine:
         Pure metadata — no device arrays; pair it with ``self.cache`` if
         the restore should re-attach the surviving KV."""
         with tracing.current().span("snapshot"):
+            # Snapshot boundary: the snapshot must capture every token
+            # the device already produced (PR-6 invariant — restore
+            # replays from host state only).
+            self._flush_pipeline()
             return self._snapshot()
 
     def _snapshot(self) -> Dict[str, object]:

@@ -114,6 +114,7 @@ class ContinuousBatchingScheduler:
         self.prefill_tokens = 0          # prefill tokens actually computed
         self.cached_prefill_tokens = 0   # prefill tokens served by aliasing
         self.decode_tokens = 0
+        self.delivery_lag_sum = 0   # Σ (delivery step − launch step)
         self.preemptions = 0
         self.completed_requests = 0
         self.cancelled_requests = 0   # structured per-request failures
@@ -366,10 +367,16 @@ class ContinuousBatchingScheduler:
             entry.arrival if entry is not None else None,
             self.max_pages_per_seq)
 
-    def note_step(self, n_active: int) -> None:
+    def note_step(self, n_active: int, *, lag: int = 0) -> None:
+        """Account one delivered decode step.  With async stepping the
+        engine calls this at token *delivery* — ``lag`` is how many
+        engine steps behind the launch that delivery ran (0 == fully
+        synchronous), so the occupancy/token counters describe the same
+        work either way, just noted one pipeline depth late."""
         self.decode_steps += 1
         self.active_step_sum += n_active
         self.decode_tokens += n_active
+        self.delivery_lag_sum += max(0, int(lag))
 
     def metrics(self) -> Dict[str, float]:
         occ = (self.active_step_sum / (self.decode_steps * self.slots)
@@ -383,6 +390,8 @@ class ContinuousBatchingScheduler:
             "prefix_hit_rate": (self.cached_prefill_tokens / asked
                                 if asked else 0.0),
             "decode_tokens": self.decode_tokens,
+            "delivery_lag_mean": (self.delivery_lag_sum / self.decode_steps
+                                  if self.decode_steps else 0.0),
             "preemptions": self.preemptions,
             "completed_requests": self.completed_requests,
             "cancelled_requests": self.cancelled_requests,

@@ -165,7 +165,15 @@ def health(*, engine=None, profiler=None, slo_report=None,
             "active": sum(1 for r in engine.slot_req if r is not None),
             "slots": engine.slots,
             "step": engine.step_idx,
+            "steps_in_flight": int(getattr(engine, "steps_in_flight", 0)),
         }
+        if scheduler["steps_in_flight"] > 0:
+            # Async pipelining: completion counters and token tallies
+            # describe the last *delivered* step, not the launches still
+            # on device — say so instead of reporting them finished.
+            scheduler["staleness"] = (
+                f"{scheduler['steps_in_flight']} step(s) in flight; "
+                f"counters lag delivery by up to that many steps")
     slo = None
     if slo_report is not None:
         slo = slo_report.as_dict() if hasattr(slo_report, "as_dict") \
@@ -244,6 +252,14 @@ def validate_health(doc) -> List[str]:
             for f in ("waiting", "active", "slots"):
                 if not isinstance(doc["scheduler"].get(f), int):
                     errs.append(f"scheduler.{f} must be an int")
+            sif = doc["scheduler"].get("steps_in_flight")
+            if sif is not None and not isinstance(sif, int):
+                errs.append("scheduler.steps_in_flight must be an int")
+            if (isinstance(sif, int) and sif > 0
+                    and not isinstance(doc["scheduler"].get("staleness"),
+                                       str)):
+                errs.append("scheduler.staleness note required when "
+                            "steps are in flight")
     if doc["slo"] is not None:
         slo = doc["slo"]
         if not isinstance(slo, dict) or not isinstance(

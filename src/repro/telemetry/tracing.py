@@ -39,7 +39,8 @@ import time
 from typing import Callable, Dict, List, Optional
 
 __all__ = ["Tracer", "NOOP", "current", "active", "install", "uninstall",
-           "trace_to", "validate_trace", "validate_trace_file"]
+           "trace_to", "span_overlaps", "validate_trace",
+           "validate_trace_file"]
 
 _PID = 1   # single-process engine: fixed pid/tid, nesting is by interval
 _TID = 1
@@ -178,11 +179,33 @@ class trace_to:
 _REQUIRED = ("name", "ph", "ts", "pid", "tid")
 
 
-def validate_trace(doc: Dict, require_names: tuple = ()) -> List[str]:
+def span_overlaps(doc: Dict, a: str, b: str) -> bool:
+    """True when some complete ('X') span named ``a`` overlaps in wall
+    time with some span named ``b`` — the async-pipelining witness: an
+    in-flight ``decode`` span must cover the next step's host-side
+    ``prefill_chunk``/``sample``/``admit`` spans.  Two intervals overlap
+    when each starts strictly before the other ends."""
+    ev = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+    spans = {a: [], b: []}
+    for e in ev:
+        if (isinstance(e, dict) and e.get("ph") == "X"
+                and e.get("name") in spans):
+            t0 = e.get("ts", 0)
+            spans[e["name"]].append((t0, t0 + e.get("dur", 0)))
+    return any(a0 < b1 and b0 < a1
+               for a0, a1 in spans[a] for b0, b1 in spans[b])
+
+
+def validate_trace(doc: Dict, require_names: tuple = (),
+                   require_overlap: tuple = ()) -> List[str]:
     """Chrome trace-event schema check.  Returns problem strings
     (empty list = valid, non-empty trace).  ``require_names`` lists
     event names that must appear at least once (coverage assertions for
-    known spans, e.g. ``graph.program`` in a compiled serving trace)."""
+    known spans, e.g. ``graph.program`` in a compiled serving trace).
+    ``require_overlap`` lists ``(a, b)`` span-name pairs that must
+    overlap in time somewhere in the trace — how CI proves the async
+    engine actually pipelines (device decode vs next-step host work)
+    rather than merely reordering."""
     errs: List[str] = []
     if not isinstance(doc, dict):
         return [f"trace document is {type(doc).__name__}, not an object"]
@@ -215,13 +238,18 @@ def validate_trace(doc: Dict, require_names: tuple = ()) -> List[str]:
     for name in require_names:
         if name not in seen:
             errs.append(f"required event {name!r} never appears")
+    for a, b in require_overlap:
+        if not span_overlaps(doc, a, b):
+            errs.append(f"required overlap {a!r} x {b!r} never occurs")
     return errs
 
 
-def validate_trace_file(path: str, require_names: tuple = ()) -> List[str]:
+def validate_trace_file(path: str, require_names: tuple = (),
+                        require_overlap: tuple = ()) -> List[str]:
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         return [f"unreadable trace {path}: {e}"]
-    return validate_trace(doc, require_names=require_names)
+    return validate_trace(doc, require_names=require_names,
+                          require_overlap=require_overlap)
